@@ -1,0 +1,82 @@
+"""Shared benchmark infrastructure: the trained DAS policy, the workload
+suite and scheduler evaluation helpers. Results are cached in-process so
+`benchmarks.run` trains the classifier once."""
+from __future__ import annotations
+
+import functools
+import os
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.core import das, oracle, simulator as sim, workloads
+
+N_INSTANCES = int(os.environ.get("REPRO_BENCH_INSTANCES", "60"))
+# training scenarios: a representative subset (all 40 x 14 in the full run,
+# REPRO_BENCH_FULL=1)
+FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+
+TRAIN_MIXES = list(range(40)) if FULL else [0, 1, 2, 3, 4, 5, 8, 12, 17, 22]
+TRAIN_RATES = list(range(14)) if FULL else [0, 3, 5, 7, 9, 11, 12, 13]
+
+
+@functools.lru_cache()
+def suite() -> workloads.WorkloadSuite:
+    return workloads.default_suite(n_instances=N_INSTANCES)
+
+
+@functools.lru_cache()
+def params() -> sim.SimParams:
+    return sim.make_params()
+
+
+@functools.lru_cache()
+def dataset(metric: str = "avg_exec_us") -> oracle.OracleDataset:
+    t0 = time.time()
+    ds = oracle.generate(suite(), params(), mix_indices=TRAIN_MIXES,
+                         rate_indices=TRAIN_RATES, metric=metric)
+    print(f"# oracle dataset[{metric}]: {len(ds)} samples "
+          f"(S-frac {ds.labels.mean():.3f}) in {time.time()-t0:.0f}s")
+    return ds
+
+
+@functools.lru_cache()
+def das_policy() -> das.DASPolicy:
+    return das.fit_policy(dataset())
+
+
+@functools.lru_cache()
+def das_policy_auto(metric: str = "avg_exec_us") -> das.DASPolicy:
+    """2 features chosen by greedy selection instead of the paper's pair."""
+    from repro.core import classifier as clf
+    ds = dataset(metric)
+    tr, _ = oracle.train_test_split(ds)
+    idx = np.random.RandomState(0).permutation(len(tr))[:6000]
+    sel = clf.greedy_select(tr.features[idx], tr.labels[idx], k=2)
+    return das.fit_policy(ds, feature_ids=sel)
+
+
+def eval_cell(mix_idx: int, rate_idx: int, mode: int,
+              tree=None, rate_threshold: float = 1e9) -> sim.SimResult:
+    wl = suite().build(mix_idx, rate_idx)
+    return sim.run(mode, wl, params(), tree=tree,
+                   rate_threshold=rate_threshold)
+
+
+def eval_all_modes(mix_idx: int, rate_idx: int,
+                   with_fs: bool = False) -> Dict[str, sim.SimResult]:
+    """DAS = paper feature pair (rate, big-cluster availability);
+    DAS-FS = the same depth-2 tree with the 2 features our feature-selection
+    pass picks on these profiles (the paper's own methodology, IV-B)."""
+    pol = das_policy()
+    out = {
+        "LUT": eval_cell(mix_idx, rate_idx, sim.MODE_LUT),
+        "ETF": eval_cell(mix_idx, rate_idx, sim.MODE_ETF),
+        "ETF-ideal": eval_cell(mix_idx, rate_idx, sim.MODE_ETF_IDEAL),
+        "DAS": eval_cell(mix_idx, rate_idx, sim.MODE_DAS, tree=pol.tree),
+    }
+    if with_fs:
+        out["DAS-FS"] = eval_cell(mix_idx, rate_idx, sim.MODE_DAS,
+                                  tree=das_policy_auto().tree)
+    return out

@@ -1,0 +1,80 @@
+"""Fig. 2 reproduction: average execution time (a-c) and EDP (d-f) of DAS,
+LUT, ETF, ETF-ideal for three representative workloads across data rates.
+
+Workload selection mirrors the paper: workload-1 = low data-rate behavior
+(temporal-mitigation-dominated mix, never congests), workload-2 = moderate
+(wifi-rx-dominated: scarce-FEC contention, the ETF-wins regime),
+workload-3 = high rate (app-1-heavy: ETF's quadratic overhead collapses,
+DAS falls back to LUT).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import workloads
+
+# mix indices in workloads.workload_mixes(): 3 = temporal-only,
+# 1 = wifi-rx-only, 4 = app1-only
+WL = [("workload-1 (low rate: temporal)", 3),
+      ("workload-2 (moderate: wifi-rx)", 1),
+      ("workload-3 (high rate: app-1)", 4)]
+RATE_IDX = [0, 3, 5, 7, 9, 10, 11, 12, 13]
+
+
+def run(csv=False):
+    rows = []
+    for title, mi in WL:
+        if not csv:
+            print(f"\n== {title} ==")
+            print(f"{'rate':>7} | {'LUT':>8} {'ETF':>8} {'DAS':>8} "
+                  f"{'DAS-FS':>8} {'ETFideal':>8} | {'EDP LUT':>9} "
+                  f"{'EDP ETF':>9} {'EDP DAS-FS':>10}")
+        for ri in RATE_IDX:
+            t0 = time.perf_counter()
+            res = common.eval_all_modes(mi, ri, with_fs=True)
+            us = time.perf_counter() - t0
+            rate = float(workloads.DATA_RATES_MBPS[ri])
+            r = {"workload": title, "rate_mbps": rate, "us_per_call": us,
+                 **{f"exec_{k}": float(v.avg_exec_us)
+                    for k, v in res.items()},
+                 **{f"edp_{k}": float(v.edp) for k, v in res.items()}}
+            rows.append(r)
+            if csv:
+                print(f"fig2,{us*1e6:.0f},"
+                      f"{title}|{rate}|{r['exec_DAS-FS']:.3f}")
+            else:
+                print(f"{rate:7.1f} | {r['exec_LUT']:8.2f} "
+                      f"{r['exec_ETF']:8.2f} {r['exec_DAS']:8.2f} "
+                      f"{r['exec_DAS-FS']:8.2f} "
+                      f"{r['exec_ETF-ideal']:8.2f} | {r['edp_LUT']:9.0f} "
+                      f"{r['edp_ETF']:9.0f} {r['edp_DAS-FS']:10.0f}")
+    # paper-claim checks (trend-level)
+    by_wl = {}
+    for r in rows:
+        by_wl.setdefault(r["workload"], []).append(r)
+    checks = []
+    lo = by_wl[WL[0][0]][0]
+    checks.append(("low-rate: DAS <= ETF exec",
+                   lo["exec_DAS"] <= lo["exec_ETF"] * 1.02))
+    checks.append(("low-rate: DAS EDP well below ETF EDP",
+                   lo["edp_DAS"] < 0.7 * lo["edp_ETF"]))
+    mid = by_wl[WL[1][0]][-3]
+    checks.append(("moderate: DAS <= LUT exec",
+                   mid["exec_DAS"] <= mid["exec_LUT"] * 1.02))
+    hi = by_wl[WL[2][0]][-1]
+    checks.append(("high-rate wl3: DAS-FS ~ LUT (ETF collapses)",
+                   hi["exec_DAS-FS"] <= hi["exec_LUT"] * 1.15))
+    for name, ok in checks:
+        print(f"  check: {name}: {'PASS' if ok else 'MISS'}")
+    print("  note: the paper's exact (rate, big-avail) pair cannot separate"
+          " the app-1 regime\n  on our synthesized profiles; the paper's own"
+          " feature-selection step (IV-B) picks\n  (head task type, LITTLE "
+          "utilization) and recovers the workload-3 behavior (DAS-FS).")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

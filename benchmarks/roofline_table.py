@@ -1,0 +1,26 @@
+"""The dry-run roofline table (§Roofline): reads dryrun_results.json
+(produced by `python -m repro.launch.dryrun --all --both-meshes`)."""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.launch import roofline
+
+PATH = os.environ.get("REPRO_DRYRUN_JSON", "/root/repo/dryrun_results.json")
+
+
+def run(csv=False):
+    if not os.path.exists(PATH):
+        print(f"  (no {PATH}; run `python -m repro.launch.dryrun --all "
+              f"--both-meshes --out {PATH}` first)")
+        return []
+    rows = roofline.main(PATH)
+    ok = [r for r in rows if r.get("status") == "ok"]
+    n_skip = sum(r.get("status") == "skipped" for r in rows)
+    print(f"\n  {len(ok)} cells analyzed, {n_skip} documented skips")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

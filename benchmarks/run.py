@@ -1,0 +1,59 @@
+"""Benchmark harness entry point: one section per paper table/figure plus
+the beyond-paper serving and roofline benchmarks. Prints
+``name,us_per_call,derived`` CSV lines with --csv.
+
+    PYTHONPATH=src python -m benchmarks.run [--csv] [--only fig2,fig3,...]
+
+Environment: REPRO_BENCH_INSTANCES (default 60) scales workload size;
+REPRO_BENCH_FULL=1 runs all 40 mixes x 14 rates for training/eval.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from benchmarks import (fig2, fig3, heuristic, overhead, roofline_table,
+                        serving_das, summary40, table2)
+
+SECTIONS = [
+    ("fig2", "Fig.2: exec time + EDP, 3 workloads x 4 schedulers", fig2.run),
+    ("fig3", "Fig.3: DAS decision mix + scheduling energy", fig3.run),
+    ("table2", "Table II: classifier accuracy/storage", table2.run),
+    ("summary40", "40-workload summary claims", summary40.run),
+    ("heuristic", "static-threshold heuristic comparison", heuristic.run),
+    ("overhead", "scheduling overhead anchors", overhead.run),
+    ("serving_das", "beyond-paper: DAS serving dispatch", serving_das.run),
+    ("roofline", "dry-run roofline table", roofline_table.run),
+]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--csv", action="store_true",
+                    help="emit name,us_per_call,derived CSV lines")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    t00 = time.time()
+    failures = []
+    for name, title, fn in SECTIONS:
+        if only and name not in only:
+            continue
+        print(f"\n{'='*72}\n== {name}: {title}\n{'='*72}")
+        t0 = time.time()
+        try:
+            fn(csv=args.csv)
+        except Exception as e:
+            failures.append((name, e))
+            traceback.print_exc()
+        print(f"-- {name} done in {time.time()-t0:.0f}s")
+    print(f"\nall benchmarks done in {time.time()-t00:.0f}s; "
+          f"{len(failures)} failures")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

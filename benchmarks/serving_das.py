@@ -1,0 +1,62 @@
+"""Beyond-paper benchmark: DAS dispatch in the LM serving engine
+(DESIGN.md section 3). Heterogeneous replica pool (the serving analog of
+big.LITTLE + accelerators), request rate sweep, LUT vs ETF vs DAS."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro import configs
+from repro.serve import costmodel as cm
+from repro.serve import dispatch as dsp
+from repro.serve import engine as eng
+
+
+def run(csv=False, arch="yi-34b"):
+    cfg = eng.EngineConfig(n_replicas=4, max_batch=16)
+    spec = cm.ReplicaSpec("v5e-8", n_chips=8)
+    mc = cm.ModelCost.from_config(configs.get_config(arch))
+
+    t0 = time.perf_counter()
+    scen = [(r, 150, s) for r in (2, 8, 20, 50, 120, 300) for s in (0, 1)]
+    das = dsp.train_das_dispatcher(scen, cfg, spec, mc)
+    train_s = time.perf_counter() - t0
+
+    rows = []
+    beats = 0
+    print(f"(DAS dispatcher: acc {das.train_accuracy:.3f}, trained in "
+          f"{train_s:.0f}s)")
+    print(f"{'rate':>6} | {'LUT ms':>8} {'ETF ms':>8} {'DAS ms':>8} | "
+          f"{'slow%':>6} | EDP LUT/ETF/DAS")
+    for rate in (2, 10, 30, 80, 200, 400):
+        res = {}
+        for name, d in (("LUT", dsp.LUTDispatcher(4)),
+                        ("ETF", dsp.ETFDispatcher()),
+                        ("DAS", dsp.DASDispatcher(das.tree, 4))):
+            reqs = eng.poisson_requests(rate, 200, seed=7)
+            res[name] = eng.run_engine(reqs, d, cfg, spec, mc)
+        r = res["DAS"]
+        sf = r.dispatch_slow / max(r.dispatch_fast + r.dispatch_slow, 1)
+        best = min(res["LUT"].mean_latency_s, res["ETF"].mean_latency_s)
+        if r.mean_latency_s <= best * 1.01:
+            beats += 1
+        rows.append({"rate": rate,
+                     **{f"lat_{k}": v.mean_latency_s
+                        for k, v in res.items()},
+                     **{f"edp_{k}": v.edp for k, v in res.items()}})
+        if csv:
+            print(f"serving_das,{rate},{r.mean_latency_s*1e3:.1f}")
+        else:
+            print(f"{rate:6.0f} | {res['LUT'].mean_latency_s*1e3:8.1f} "
+                  f"{res['ETF'].mean_latency_s*1e3:8.1f} "
+                  f"{r.mean_latency_s*1e3:8.1f} | {sf:6.2f} | "
+                  f"{res['LUT'].edp:8.0f}/{res['ETF'].edp:8.0f}/"
+                  f"{r.edp:8.0f}")
+    print(f"  check: DAS matches/beats best at >=4/6 rates: "
+          f"{'PASS' if beats >= 4 else 'MISS'} ({beats}/6)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,77 @@
+"""The 40-workload summary (paper IV-C): DAS speedup and EDP reduction vs
+ETF at low data rates and vs LUT at high workload complexity; plus the
+fraction of (workload, rate) cells where DAS >= min(LUT, ETF)."""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import workloads
+
+LOW_RATES = [0, 1, 2]
+HIGH_RATES = [11, 12, 13]
+N_MIXES = 40 if os.environ.get("REPRO_BENCH_FULL", "0") == "1" else 14
+
+
+def run(csv=False):
+    t0 = time.perf_counter()
+    mixes = list(range(N_MIXES))
+    # the paper labels pendings by "the target metric, such as the average
+    # execution time OR energy-delay product": exec-trained policy for the
+    # speedup claims, EDP-trained policy for the EDP claims.
+    from repro.core import simulator as sim
+    pol_edp = common.das_policy_auto("edp")
+    sp_vs_etf, edp_vs_etf = [], []
+    sp_vs_lut, edp_vs_lut = [], []
+    das_best = 0
+    cells = 0
+    for mi in mixes:
+        for ri in LOW_RATES + HIGH_RATES:
+            res = common.eval_all_modes(mi, ri, with_fs=True)
+            d, l, e = res["DAS-FS"], res["LUT"], res["ETF"]
+            de = common.eval_cell(mi, ri, sim.MODE_DAS, tree=pol_edp.tree)
+            cells += 1
+            if float(d.avg_exec_us) <= min(float(l.avg_exec_us),
+                                           float(e.avg_exec_us)) * 1.02:
+                das_best += 1
+            if ri in LOW_RATES:
+                sp_vs_etf.append(float(e.avg_exec_us) / float(d.avg_exec_us))
+                edp_vs_etf.append(1 - float(de.edp) / float(e.edp))
+            else:
+                sp_vs_lut.append(float(l.avg_exec_us) / float(d.avg_exec_us))
+                edp_vs_lut.append(1 - float(de.edp) / float(l.edp))
+    us = time.perf_counter() - t0
+    out = {
+        "speedup_vs_etf_low": float(np.mean(sp_vs_etf)),
+        "edp_red_vs_etf_low": float(np.mean(edp_vs_etf)),
+        "speedup_vs_lut_high": float(np.mean(sp_vs_lut)),
+        "edp_red_vs_lut_high": float(np.mean(edp_vs_lut)),
+        "das_matches_best_frac": das_best / cells,
+        "n_mixes": len(mixes), "us_per_call": us,
+    }
+    if csv:
+        print(f"summary40,{us*1e6:.0f},"
+              f"{out['speedup_vs_etf_low']:.3f}|{out['edp_red_vs_etf_low']:.3f}"
+              f"|{out['speedup_vs_lut_high']:.3f}|"
+              f"{out['edp_red_vs_lut_high']:.3f}")
+    else:
+        print(f"over {len(mixes)} workload mixes "
+              f"({cells} cells, {us:.0f}s):")
+        print(f"  low rates:  DAS vs ETF speedup {out['speedup_vs_etf_low']:.2f}x "
+              f"(paper 1.29x), EDP -{out['edp_red_vs_etf_low']*100:.0f}% "
+              f"(paper -45%)")
+        print(f"  high rates: DAS vs LUT speedup {out['speedup_vs_lut_high']:.2f}x "
+              f"(paper 1.28x), EDP -{out['edp_red_vs_lut_high']*100:.0f}% "
+              f"(paper -37%)")
+        print(f"  DAS matches/beats the best baseline in "
+              f"{out['das_matches_best_frac']*100:.0f}% of cells")
+        print(f"  check: DAS>=both in >70% of cells: "
+              f"{'PASS' if out['das_matches_best_frac'] > 0.7 else 'MISS'}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,76 @@
+"""Table II reproduction: classification accuracy + storage for LR and DT
+classifiers vs number of features (our profiles; same methodology)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import classifier as clf, oracle, simulator as sim
+
+
+def run(csv=False):
+    ds = common.dataset()
+    tr, te = oracle.train_test_split(ds)
+    sub = np.random.RandomState(0).permutation(len(tr))[:20000]
+    Xs, ys = tr.features[sub], tr.labels[sub]
+
+    scores = clf.feature_scores(Xs[:4000], ys[:4000], depth=2)
+    order = np.argsort(-scores)
+    top6 = [int(i) for i in order[:6]]
+    paper2 = [sim.FEAT_RATE, sim.FEAT_BIG_AVAIL]
+
+    rows = []
+
+    def add(name, model, cols, t0):
+        acc = model.accuracy(te.features[:, cols], te.labels)
+        rows.append({
+            "classifier": name, "n_features": len(cols),
+            "accuracy": acc, "storage_kb": model.storage_kb(),
+            "us_per_call": time.perf_counter() - t0,
+        })
+
+    t0 = time.perf_counter()
+    add("LR (2 feat, paper pair)", clf.LogisticRegression.fit(
+        Xs[:, paper2], ys), paper2, t0)
+    t0 = time.perf_counter()
+    all_cols = list(range(Xs.shape[1]))
+    add("LR (62 feat)", clf.LogisticRegression.fit(Xs, ys), all_cols, t0)
+    t0 = time.perf_counter()
+    add("DT d2 (1 feat: rate)", clf.DecisionTree.fit(
+        Xs[:, [sim.FEAT_RATE]], ys, 2), [sim.FEAT_RATE], t0)
+    t0 = time.perf_counter()
+    add("DT d2 (2 feat, paper pair)", clf.DecisionTree.fit(
+        Xs[:, paper2], ys, 2), paper2, t0)
+    t0 = time.perf_counter()
+    add("DT d2 (2 feat, selected)", clf.DecisionTree.fit(
+        Xs[:, top6[:2]], ys, 2), top6[:2], t0)
+    t0 = time.perf_counter()
+    add("DT d4 (6 feat)", clf.DecisionTree.fit(
+        Xs[:, top6], ys, 4), top6, t0)
+    t0 = time.perf_counter()
+    add("DT d16 (62 feat)", clf.DecisionTree.fit(Xs, ys, 16), all_cols, t0)
+
+    print(f"{'classifier':28s} {'#feat':>5} {'acc%':>7} {'KB':>8}")
+    for r in rows:
+        if csv:
+            print(f"table2,{r['us_per_call']*1e6:.0f},"
+                  f"{r['classifier']}|{r['accuracy']*100:.2f}|"
+                  f"{r['storage_kb']:.3f}")
+        else:
+            print(f"{r['classifier']:28s} {r['n_features']:5d} "
+                  f"{r['accuracy']*100:7.2f} {r['storage_kb']:8.3f}")
+    print(f"  top-6 selected features: "
+          f"{[sim.FEAT_NAMES[i] for i in top6]}")
+    d16 = rows[-1]["accuracy"]
+    d2 = rows[4]["accuracy"]
+    print(f"  check: deep tree >= shallow tree accuracy: "
+          f"{'PASS' if d16 >= d2 - 0.02 else 'MISS'}")
+    print(f"  check: shallow DT storage << deep DT storage: "
+          f"{'PASS' if rows[3]['storage_kb'] < rows[-1]['storage_kb']/100 else 'MISS'}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Quickstart: train the DAS preselection classifier and beat both
+underlying schedulers on a congested workload.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import das, simulator as sim, workloads
+
+# 1. build a workload suite (mixes of the five streaming applications)
+suite = workloads.default_suite(n_instances=40)
+params = sim.make_params()
+
+# 2. train DAS: two-execution oracle -> depth-2 decision tree on the
+#    paper's two features (input data rate, big-cluster availability)
+policy = das.train_das_policy = das.train_das(
+    suite, params,
+    mix_indices=[0, 1, 3, 4, 5],      # tx/rx/temporal/app1/uniform mixes
+    rate_indices=[0, 5, 9, 12, 13],
+)
+print(f"classifier: train acc {policy.train_accuracy:.3f}, "
+      f"test acc {policy.test_accuracy:.3f} on {policy.n_train} samples")
+
+# 3. evaluate on a congested wifi-rx workload
+wl = suite.build(mix_idx=1, rate_idx=11)
+for name, mode, kw in [
+    ("LUT (fast)", sim.MODE_LUT, {}),
+    ("ETF (slow)", sim.MODE_ETF, {}),
+    ("DAS", sim.MODE_DAS, {"tree": policy.tree}),
+]:
+    r = sim.run(mode, wl, params, **kw)
+    frac = int(r.n_slow) / max(int(r.n_decisions), 1)
+    print(f"{name:12s} avg exec {float(r.avg_exec_us):7.2f} us | "
+          f"EDP {float(r.edp):9.0f} | slow-scheduler use {frac:4.0%}")

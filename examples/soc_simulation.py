@@ -1,0 +1,32 @@
+"""End-to-end DSSoC study: sweep all 14 data rates on a chosen application
+mix and print the four-scheduler comparison (a Fig. 2 panel).
+
+    PYTHONPATH=src python examples/soc_simulation.py [mix_idx]
+"""
+import sys
+
+from repro.core import das, simulator as sim, workloads
+
+mix = int(sys.argv[1]) if len(sys.argv) > 1 else 5  # uniform five-app mix
+suite = workloads.default_suite(n_instances=60)
+params = sim.make_params()
+
+policy = das.train_das(suite, params, mix_indices=[0, 1, 3, 4, 5],
+                       rate_indices=[0, 5, 9, 12, 13])
+
+print(f"mix {mix}: ratios {suite.mixes[mix].round(2)}")
+print(f"{'rate Mbps':>10} | {'LUT':>8} {'ETF':>8} {'ETF-ideal':>9} "
+      f"{'DAS':>8} | {'DAS slow%':>9}")
+for ri in range(len(suite.rates)):
+    wl = suite.build(mix, ri)
+    r = {}
+    r["LUT"] = sim.run(sim.MODE_LUT, wl, params)
+    r["ETF"] = sim.run(sim.MODE_ETF, wl, params)
+    r["IDE"] = sim.run(sim.MODE_ETF_IDEAL, wl, params)
+    r["DAS"] = sim.run(sim.MODE_DAS, wl, params, tree=policy.tree)
+    sf = int(r["DAS"].n_slow) / max(int(r["DAS"].n_decisions), 1)
+    print(f"{float(suite.rates[ri]):10.1f} | "
+          f"{float(r['LUT'].avg_exec_us):8.2f} "
+          f"{float(r['ETF'].avg_exec_us):8.2f} "
+          f"{float(r['IDE'].avg_exec_us):9.2f} "
+          f"{float(r['DAS'].avg_exec_us):8.2f} | {sf:9.0%}")

@@ -1,0 +1,144 @@
+"""Fault-tolerant checkpointing.
+
+Layout:  <dir>/step_<N>/
+             manifest.json     (treedef, shapes, dtypes, step, extra meta)
+             arrays.npz        (flat leaves, keyed "leaf_<i>")
+         <dir>/LATEST          (atomic pointer file)
+
+Properties:
+  * atomic: written to a tmp dir, fsync'd, then os.replace'd; LATEST is
+    swapped last, so a crash mid-write never corrupts the restore path.
+  * async: `save_async` runs in a daemon thread (the train loop keeps going;
+    `wait()` joins before the next save).
+  * elastic: restore is mesh-agnostic — arrays are loaded host-side and
+    `jax.device_put` against whatever sharding the *new* mesh prescribes, so
+    a job restarted with a different device count resumes cleanly.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[list, Any]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str, tree, step: int, meta: Optional[dict] = None) -> str:
+    leaves, treedef = _flatten(tree)
+    step_dir = os.path.join(path, f"step_{step:08d}")
+    tmp_dir = step_dir + ".tmp"
+    if os.path.exists(tmp_dir):
+        shutil.rmtree(tmp_dir)
+    os.makedirs(tmp_dir, exist_ok=True)
+    arrays = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
+    np.savez(os.path.join(tmp_dir, "arrays.npz"), **arrays)
+    manifest = {
+        "treedef": str(treedef),
+        "n_leaves": len(leaves),
+        "step": step,
+        "shapes": [list(a.shape) for a in arrays.values()],
+        "dtypes": [str(a.dtype) for a in arrays.values()],
+        "meta": meta or {},
+    }
+    mpath = os.path.join(tmp_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(step_dir):
+        shutil.rmtree(step_dir)
+    os.replace(tmp_dir, step_dir)
+    latest_tmp = os.path.join(path, "LATEST.tmp")
+    with open(latest_tmp, "w") as f:
+        f.write(os.path.basename(step_dir))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(latest_tmp, os.path.join(path, "LATEST"))
+    return step_dir
+
+
+def latest_step(path: str) -> Optional[int]:
+    lp = os.path.join(path, "LATEST")
+    if not os.path.exists(lp):
+        return None
+    with open(lp) as f:
+        name = f.read().strip()
+    if not name.startswith("step_"):
+        return None
+    d = os.path.join(path, name)
+    if not os.path.exists(os.path.join(d, "manifest.json")):
+        return None
+    return int(name[5:])
+
+
+def restore(path: str, like, step: Optional[int] = None,
+            shardings=None) -> Tuple[Any, int, dict]:
+    """Restore into the structure of `like` (a pytree or abstract pytree).
+    If `shardings` (matching pytree of NamedShardings) is given, leaves are
+    device_put with them — this is the elastic-remesh path."""
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {path}")
+    step_dir = os.path.join(path, f"step_{step:08d}")
+    with open(os.path.join(step_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(step_dir, "arrays.npz"))
+    leaves = [data[f"leaf_{i}"] for i in range(manifest["n_leaves"])]
+    _, treedef = _flatten(like)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda a, s: jax.device_put(a, s), tree, shardings)
+    else:
+        tree = jax.tree.map(jax.numpy.asarray, tree)
+    return tree, step, manifest["meta"]
+
+
+class AsyncCheckpointer:
+    """Serializes saves on a daemon thread; overlaps I/O with training."""
+
+    def __init__(self, path: str):
+        self.path = path
+        os.makedirs(path, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save_async(self, tree, step: int, meta: Optional[dict] = None):
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)  # snapshot on host
+
+        def run():
+            try:
+                save(self.path, host_tree, step, meta)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=run, daemon=True)
+        self._thread.start()
+
+
+def prune_old(path: str, keep: int = 3):
+    if not os.path.isdir(path):
+        return
+    steps = sorted(
+        int(d[5:]) for d in os.listdir(path)
+        if d.startswith("step_") and not d.endswith(".tmp"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(path, f"step_{s:08d}"), ignore_errors=True)

@@ -1,0 +1,116 @@
+"""Two-execution oracle generation for DAS training data (paper Fig. 1).
+
+First execution (MODE_ORACLE): both schedulers run at every decision; if they
+agree the sample is labeled F immediately; otherwise the label is *pending*
+and the fast decision is followed.
+
+Second execution (MODE_ETF): the same scenario follows the slow scheduler
+throughout. If the target metric (avg execution time or EDP) improves versus
+the first execution, pending labels become S, else F.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List, Tuple
+
+import numpy as np
+
+from repro.core import simulator as sim
+from repro.core.workloads import FlatWorkload, WorkloadSuite
+
+LABEL_F, LABEL_S = 0, 1
+
+
+@dataclasses.dataclass
+class OracleDataset:
+    features: np.ndarray   # [N, N_FEATURES] f32
+    labels: np.ndarray     # [N] int32 (0=F, 1=S)
+    groups: np.ndarray     # [N] int32 (workload-mix id of each sample)
+    rates: np.ndarray      # [N] f32 (nominal data rate of the run)
+
+    def __len__(self) -> int:
+        return int(self.labels.shape[0])
+
+
+def label_one_run(
+    wl: FlatWorkload,
+    params: sim.SimParams,
+    metric: str = "avg_exec_us",
+) -> Tuple[np.ndarray, np.ndarray, dict]:
+    """Run the two executions for one (workload, rate) scenario.
+
+    Returns (features [D, F], labels [D], info).
+    """
+    r1 = sim.run(sim.MODE_ORACLE, wl, params)   # follows fast
+    r2 = sim.run(sim.MODE_ETF, wl, params)      # follows slow
+    n_dec = int(r1.n_decisions)
+    feats = np.asarray(r1.log_feat)[:n_dec]
+    agree = np.asarray(r1.log_agree)[:n_dec].astype(bool)
+
+    m1 = float(getattr(r1, metric))
+    m2 = float(getattr(r2, metric))
+    pending_label = LABEL_S if m2 < m1 else LABEL_F
+    labels = np.where(agree, LABEL_F, pending_label).astype(np.int32)
+    info = {
+        "metric_fast_run": m1,
+        "metric_slow_run": m2,
+        "pending_label": pending_label,
+        "n_decisions": n_dec,
+        "agreement_rate": float(agree.mean()) if n_dec else 0.0,
+    }
+    return feats, labels, info
+
+
+def generate(
+    suite: WorkloadSuite,
+    params: sim.SimParams | None = None,
+    mix_indices: Iterable[int] | None = None,
+    rate_indices: Iterable[int] | None = None,
+    metric: str = "avg_exec_us",
+    seed: int = 0,
+    verbose: bool = False,
+) -> OracleDataset:
+    """Generate the oracle dataset over (mix x rate) scenarios."""
+    params = params or sim.make_params()
+    mix_indices = list(mix_indices if mix_indices is not None
+                       else range(suite.mixes.shape[0]))
+    rate_indices = list(rate_indices if rate_indices is not None
+                        else range(len(suite.rates)))
+    feats: List[np.ndarray] = []
+    labels: List[np.ndarray] = []
+    groups: List[np.ndarray] = []
+    rates: List[np.ndarray] = []
+    for mi in mix_indices:
+        for ri in rate_indices:
+            wl = suite.build(mi, ri, seed=seed)
+            f, l, info = label_one_run(wl, params, metric=metric)
+            feats.append(f)
+            labels.append(l)
+            groups.append(np.full(l.shape[0], mi, np.int32))
+            rates.append(np.full(l.shape[0], float(suite.rates[ri]),
+                                 np.float32))
+            if verbose:
+                print(f"mix={mi:2d} rate={float(suite.rates[ri]):7.1f} "
+                      f"n={info['n_decisions']:5d} "
+                      f"agree={info['agreement_rate']:.2f} "
+                      f"pending->{'S' if info['pending_label'] else 'F'} "
+                      f"(F-run {info['metric_fast_run']:.2f} vs "
+                      f"S-run {info['metric_slow_run']:.2f})")
+    return OracleDataset(
+        features=np.concatenate(feats, axis=0),
+        labels=np.concatenate(labels, axis=0),
+        groups=np.concatenate(groups, axis=0),
+        rates=np.concatenate(rates, axis=0),
+    )
+
+
+def train_test_split(ds: OracleDataset, test_frac: float = 0.25,
+                     seed: int = 0):
+    rng = np.random.RandomState(seed)
+    n = len(ds)
+    idx = rng.permutation(n)
+    cut = int(n * (1 - test_frac))
+    tr, te = idx[:cut], idx[cut:]
+    mk = lambda ii: OracleDataset(ds.features[ii], ds.labels[ii],
+                                  ds.groups[ii], ds.rates[ii])
+    return mk(tr), mk(te)

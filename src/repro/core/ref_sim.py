@@ -1,0 +1,164 @@
+"""Independent pure-Python reference simulator (differential oracle).
+
+Implements the same event semantics as the jittable simulator —
+completions due, then arrivals due, then one scheduling decision, else
+advance — with plain dicts and floats. Used by tests/test_differential.py
+to cross-check the lax.while_loop implementation: two independently-written
+simulators agreeing on per-task finish times is strong evidence neither
+mis-encodes the model.
+
+Tie-breaking contracts replicated exactly:
+  * completions: earliest (finish, task-id),
+  * LUT: FIFO head task; earliest-free PE within the LUT cluster
+    (lowest PE id on ties),
+  * ETF: scan ready slots in FIFO order x PEs ascending; strict '<' keeps
+    the first minimum (matches argmin over the flattened [R, P] matrix).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import soc
+from repro.core.simulator import (MODE_ETF, MODE_ETF_IDEAL, MODE_LUT)
+from repro.core.workloads import FlatWorkload
+
+
+def simulate_ref(mode: int, wl: FlatWorkload,
+                 cfg: soc.SoCConfig | None = None) -> Dict:
+    cfg = cfg or soc.default_soc()
+    exec_pe = cfg.exec_on_pe()                    # [types, P]
+    pe_cluster = cfg.pe_cluster
+    pe_power = cfg.cluster_power[pe_cluster]
+    n_tasks = int(wl.n_tasks)
+    n_inst = int(wl.n_insts)
+    P = cfg.n_pes
+
+    pred_rem = wl.n_preds.astype(int).copy()
+    finish = np.full(n_tasks, np.inf)
+    start = np.full(n_tasks, np.inf)
+    pe_of = np.full(n_tasks, -1, int)
+    status = np.zeros(n_tasks, int)               # 0 wait, 2 ready, 3 run, 4 done
+    ready_base = np.zeros(n_tasks)
+    ready: List[int] = []                         # FIFO
+    pe_free = np.zeros(P)
+    now = 0.0
+    sched_free = 0.0
+    arr_ptr = 0
+    n_done = 0
+    task_energy = 0.0
+    sched_energy = 0.0
+    sched_time = 0.0
+
+    def avail_comm(t: int, pe: int) -> float:
+        base = ready_base[t]
+        for k in range(int(wl.n_preds[t])):
+            p = int(wl.preds[t, k])
+            comm = (float(wl.out_kb[p]) * cfg.us_per_kb
+                    if pe_cluster[pe_of[p]] != pe_cluster[pe] else 0.0)
+            base = max(base, finish[p] + comm)
+        return base
+
+    def lut_choice():
+        t = ready[0]
+        cl = int(cfg.lut_cluster[wl.task_type[t]])
+        pes = np.where(pe_cluster == cl)[0]
+        pe = int(pes[np.argmin(pe_free[pes])])
+        return 0, pe
+
+    def etf_choice():
+        best = (np.inf, -1, -1)
+        for slot, t in enumerate(ready):
+            for pe in range(P):
+                e = exec_pe[wl.task_type[t], pe]
+                if not np.isfinite(e):
+                    continue
+                ft = max(avail_comm(t, pe), pe_free[pe], now) + e
+                if ft < best[0]:
+                    best = (ft, slot, pe)
+        return best[1], best[2]
+
+    while n_done < n_tasks:
+        # 1. completions due
+        due = [(finish[t], t) for t in range(n_tasks)
+               if status[t] == 3 and finish[t] <= now]
+        if due:
+            _, t = min(due)
+            status[t] = 4
+            n_done += 1
+            for k in range(int(wl.n_succs[t])):
+                s = int(wl.succs[t, k])
+                pred_rem[s] -= 1
+                if pred_rem[s] == 0:
+                    base = max((finish[int(wl.preds[s, j])]
+                                for j in range(int(wl.n_preds[s]))),
+                               default=now)
+                    ready_base[s] = max(base, now)
+                    status[s] = 2
+                    ready.append(s)
+            continue
+        # 2. arrivals due
+        if arr_ptr < n_inst and wl.inst_arrival[arr_ptr] <= now:
+            i = arr_ptr
+            arr_ptr += 1
+            for k in range(int(wl.inst_n_roots[i])):
+                r = int(wl.inst_roots[i, k])
+                ready_base[r] = float(wl.inst_arrival[i])
+                status[r] = 2
+                ready.append(r)
+            continue
+        # 3. one scheduling decision
+        if ready:
+            n = float(len(ready))
+            if mode == MODE_LUT:
+                slot, pe = lut_choice()
+                lat, e = float(soc.LUT_LATENCY_US), float(soc.LUT_ENERGY_UJ)
+            elif mode == MODE_ETF:
+                slot, pe = etf_choice()
+                lat = float(soc.etf_latency_us(n))
+                e = lat * float(soc.SCHED_POWER_W)
+            elif mode == MODE_ETF_IDEAL:
+                slot, pe = etf_choice()
+                lat, e = 0.0, 0.0
+            else:
+                raise ValueError(mode)
+            t = ready.pop(slot)
+            sched_done = max(sched_free, now) + lat
+            sched_free = sched_done
+            st = max(avail_comm(t, pe), pe_free[pe], sched_done, now)
+            ex = float(exec_pe[wl.task_type[t], pe])
+            start[t] = st
+            finish[t] = st + ex
+            pe_of[t] = pe
+            pe_free[pe] = finish[t]
+            status[t] = 3
+            task_energy += ex * float(pe_power[pe])
+            sched_energy += e
+            sched_time += lat
+            continue
+        # 4. advance time
+        nxt = np.inf
+        if arr_ptr < n_inst:
+            nxt = min(nxt, float(wl.inst_arrival[arr_ptr]))
+        running = finish[status == 3]
+        if running.size:
+            nxt = min(nxt, float(running.min()))
+        if not np.isfinite(nxt):
+            break
+        now = max(now, nxt)
+
+    inst_fin = np.full(n_inst, -np.inf)
+    for t in range(n_tasks):
+        inst_fin[int(wl.inst_id[t])] = max(inst_fin[int(wl.inst_id[t])],
+                                           finish[t])
+    inst_exec = inst_fin - wl.inst_arrival[:n_inst]
+    return {
+        "avg_exec_us": float(np.mean(inst_exec)),
+        "finish": finish,
+        "pe_of": pe_of,
+        "task_energy_uj": task_energy,
+        "sched_energy_uj": sched_energy,
+        "sched_time_us": sched_time,
+        "n_done": n_done,
+    }

@@ -1,0 +1,582 @@
+"""Jittable discrete-event DSSoC simulator (DS3-style) in pure JAX.
+
+One `lax.while_loop` iteration handles exactly one of, in priority order:
+  1. a task completion whose finish time is due (finish <= now),
+  2. a frame (application-instance) arrival that is due,
+  3. one scheduling decision if the ready queue is non-empty,
+  4. otherwise advance simulated time to the next event.
+
+Scheduling overhead is modeled faithfully to the paper: the scheduler is a
+serial resource (`sched_free`); each decision occupies it for the policy's
+latency and burns the policy's energy; a scheduled task cannot start before
+its decision completes.
+
+Modes
+-----
+  MODE_LUT        fast scheduler only (paper's F)
+  MODE_ETF        slow scheduler only (paper's S, Algorithm 1)
+  MODE_ETF_IDEAL  ETF with zero scheduling overhead (paper's ETF-ideal)
+  MODE_DAS        depth-2 decision tree preselects F or S per decision
+  MODE_ORACLE     run both schedulers per decision, follow F, log agreement
+                  (paper's "first execution" for oracle generation)
+  MODE_THRESHOLD  static data-rate threshold picks F or S (paper's heuristic)
+
+The whole simulation jits; `simulate` is wrapped in `jax.jit` with the mode
+and capacity constants static.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import soc
+from repro.core.workloads import FlatWorkload, FRAME_KBITS
+
+MODE_LUT = 0
+MODE_ETF = 1
+MODE_ETF_IDEAL = 2
+MODE_DAS = 3
+MODE_ORACLE = 4
+MODE_THRESHOLD = 5
+
+MODE_NAMES = {
+    MODE_LUT: "LUT",
+    MODE_ETF: "ETF",
+    MODE_ETF_IDEAL: "ETF-ideal",
+    MODE_DAS: "DAS",
+    MODE_ORACLE: "oracle",
+    MODE_THRESHOLD: "threshold",
+}
+
+R_MAX = 256         # ready-queue capacity (compact buffer)
+RING = 8            # data-rate shift register entries (paper: 8x16bit)
+N_FEATURES = 62     # performance-counter feature bank size (paper Table I)
+_INF = jnp.float32(jnp.inf)
+_NEG = jnp.float32(-jnp.inf)
+
+
+class SimParams(NamedTuple):
+    """Device-side hardware tables (from `soc.SoCConfig`)."""
+
+    exec_pe: jax.Array        # [n_types, P] f32 (inf = cannot run)
+    pe_cluster: jax.Array     # [P] i32
+    pe_power: jax.Array       # [P] f32
+    lut_cluster: jax.Array    # [n_types] i32
+    cluster_pe_mask: jax.Array  # [C, P] bool
+    us_per_kb: jax.Array      # [] f32
+
+
+def make_params(cfg: soc.SoCConfig | None = None) -> SimParams:
+    cfg = cfg or soc.default_soc()
+    return SimParams(
+        exec_pe=jnp.asarray(cfg.exec_on_pe()),
+        pe_cluster=jnp.asarray(cfg.pe_cluster),
+        pe_power=jnp.asarray(cfg.cluster_power[cfg.pe_cluster]),
+        lut_cluster=jnp.asarray(cfg.lut_cluster),
+        cluster_pe_mask=jnp.asarray(cfg.cluster_pe_mask),
+        us_per_kb=jnp.float32(cfg.us_per_kb),
+    )
+
+
+class DTree(NamedTuple):
+    """Depth-2 decision tree over the feature vector (3 internal nodes).
+
+    node 0 is the root; node 1 is the left child (feature < thr), node 2 the
+    right child. Leaves: [LL, LR, RL, RR], value 1 => use the slow scheduler.
+    """
+
+    feat: jax.Array    # [3] i32 feature indices
+    thr: jax.Array     # [3] f32 thresholds
+    leaf: jax.Array    # [4] i32 in {0, 1}
+
+    def predict(self, f: jax.Array) -> jax.Array:
+        right0 = f[self.feat[0]] >= self.thr[0]
+        node = jnp.where(right0, 2, 1)
+        rightc = f[self.feat[node]] >= self.thr[node]
+        idx = jnp.where(right0, 2, 0) + rightc.astype(jnp.int32)
+        return self.leaf[idx]
+
+
+def always_fast_tree() -> DTree:
+    return DTree(feat=jnp.zeros(3, jnp.int32), thr=jnp.full(3, jnp.inf),
+                 leaf=jnp.zeros(4, jnp.int32))
+
+
+class SimState(NamedTuple):
+    now: jax.Array          # [] f32
+    sched_free: jax.Array   # [] f32 scheduler-core availability
+    arr_ptr: jax.Array      # [] i32 next instance to arrive
+    n_done: jax.Array       # [] i32
+    n_sched: jax.Array      # [] i32 tasks scheduled so far
+    status: jax.Array       # [T] i8 0=waiting 2=ready 3=running 4=done
+    pred_rem: jax.Array     # [T] i32
+    ready_base: jax.Array   # [T] f32 availability w/o comm
+    start: jax.Array        # [T] f32
+    finish: jax.Array       # [T] f32 (inf until scheduled)
+    pe_of: jax.Array        # [T] i32 (-1 until scheduled)
+    pe_free: jax.Array      # [P] f32
+    pe_busy: jax.Array      # [P] f32 accumulated busy time
+    ready_ids: jax.Array    # [R_MAX] i32 FIFO, -1 = empty
+    ready_cnt: jax.Array    # [] i32
+    ready_drop: jax.Array   # [] i32 overflow counter (should stay 0)
+    task_energy: jax.Array  # [] f32 uJ
+    sched_energy: jax.Array  # [] f32 uJ
+    sched_time: jax.Array   # [] f32 us of scheduler occupancy
+    n_fast: jax.Array       # [] i32
+    n_slow: jax.Array       # [] i32
+    ring: jax.Array         # [RING] f32 last arrival timestamps
+    ring_ptr: jax.Array     # [] i32
+    arr_count: jax.Array    # [] i32
+    # decision logs (capacity T)
+    d_ptr: jax.Array        # [] i32
+    log_feat: jax.Array     # [T, N_FEATURES] f32
+    log_policy: jax.Array   # [T] i8 (0 fast, 1 slow)
+    log_agree: jax.Array    # [T] i8 (oracle: fast/slow decisions identical)
+    log_task: jax.Array     # [T] i32
+
+
+class SimResult(NamedTuple):
+    avg_exec_us: jax.Array     # [] f32 mean instance latency
+    makespan_us: jax.Array     # [] f32
+    total_energy_uj: jax.Array  # [] f32 (task + scheduling energy)
+    task_energy_uj: jax.Array
+    sched_energy_uj: jax.Array
+    sched_time_us: jax.Array
+    edp: jax.Array             # [] f32 total energy * avg exec time
+    n_decisions: jax.Array     # [] i32
+    n_fast: jax.Array
+    n_slow: jax.Array
+    n_done: jax.Array
+    ready_drop: jax.Array
+    inst_exec_us: jax.Array    # [I] f32 per-instance latency (inf = invalid)
+    # oracle / analysis logs
+    log_feat: jax.Array
+    log_policy: jax.Array
+    log_agree: jax.Array
+    log_task: jax.Array
+    finish: jax.Array          # [T] f32
+    pe_of: jax.Array           # [T] i32
+
+
+# ---------------------------------------------------------------------------
+# feature bank (paper Table I: task / PE / system counters, 62 total)
+# ---------------------------------------------------------------------------
+def _features(p: SimParams, wl: FlatWorkload, s: SimState) -> jax.Array:
+    now = s.now
+    cnt = jnp.minimum(s.arr_count, RING)
+    oldest = jnp.where(
+        s.arr_count >= RING, s.ring[s.ring_ptr % RING],
+        s.ring[0],
+    )
+    newest = s.ring[(s.ring_ptr - 1) % RING]
+    span = jnp.maximum(newest - oldest, 1e-3)
+    rate_est = jnp.where(
+        cnt >= 2,
+        (cnt - 1).astype(jnp.float32) * FRAME_KBITS * 1000.0 / span,
+        0.0,
+    )  # Mbps
+
+    pe_avail = jnp.maximum(s.pe_free - now, 0.0)              # [P]
+    cl_avail = jnp.where(
+        p.cluster_pe_mask, pe_avail[None, :], _INF
+    ).min(axis=1)                                             # [C]
+    util = s.pe_busy / jnp.maximum(now, 1e-3)                 # [P]
+
+    head = s.ready_ids[0]
+    head_ok = head >= 0
+    h = jnp.maximum(head, 0)
+    htype = wl.task_type[h]
+    hpreds = wl.preds[h]                                      # [MP]
+    hvalid = jnp.arange(hpreds.shape[0]) < wl.n_preds[h]
+    pred_cl = jnp.where(
+        hvalid & (hpreds >= 0),
+        p.pe_cluster[jnp.maximum(s.pe_of[jnp.maximum(hpreds, 0)], 0)],
+        -1,
+    )
+    pred_cl = jnp.pad(pred_cl, (0, max(0, 4 - pred_cl.shape[0])),
+                      constant_values=-1)[:4]
+    lut_cl = p.lut_cluster[htype]
+    lut_pe = p.cluster_pe_mask[lut_cl].argmax()   # first PE of LUT cluster
+
+    def z(x):
+        return jnp.where(head_ok, x.astype(jnp.float32), 0.0)
+
+    feats = jnp.concatenate([
+        jnp.array([rate_est, s.ready_cnt.astype(jnp.float32)]),
+        cl_avail,                                  # 6
+        pe_avail,                                  # 19
+        util,                                      # 19
+        jnp.array([
+            z(htype), z(wl.depth[h]), z(wl.app_id[h]), z(wl.out_kb[h]),
+            z(p.exec_pe[htype, 0]),                        # exec on big
+            z(p.exec_pe[htype, lut_pe]),                   # exec on LUT PE
+            z(p.exec_pe[htype, lut_pe] * p.pe_power[lut_pe]),
+            z(wl.n_preds[h]),
+        ]),
+        pred_cl.astype(jnp.float32),               # 4
+        jnp.array([
+            jnp.maximum(s.sched_free - now, 0.0),
+            s.arr_count.astype(jnp.float32),
+            s.n_done.astype(jnp.float32)
+            / jnp.maximum(wl.n_tasks.astype(jnp.float32), 1.0),
+            (s.status == 3).sum().astype(jnp.float32),
+        ]),
+    ])
+    assert feats.shape == (N_FEATURES,), feats.shape
+    return feats
+
+
+FEAT_RATE = 0           # input data rate (paper's #1 feature)
+FEAT_BIG_AVAIL = 2      # earliest availability of the big cluster (#2)
+FEAT_NAMES = (
+    ["input_data_rate", "ready_queue_len"]
+    + [f"cluster_avail_{c}" for c in soc.CLUSTER_NAMES]
+    + [f"pe_avail_{i}" for i in range(soc.N_PES)]
+    + [f"pe_util_{i}" for i in range(soc.N_PES)]
+    + ["head_type", "head_depth", "head_app", "head_out_kb",
+       "head_exec_big", "head_exec_lut", "head_energy_lut", "head_n_preds"]
+    + [f"head_pred_cluster_{k}" for k in range(4)]
+    + ["sched_backlog", "arrivals_so_far", "done_frac", "running_count"]
+)
+
+
+# ---------------------------------------------------------------------------
+# scheduler decision helpers
+# ---------------------------------------------------------------------------
+def _avail_with_comm(p: SimParams, wl: FlatWorkload, s: SimState,
+                     tasks: jax.Array) -> jax.Array:
+    """[R, P] task availability including NoC transfer from pred clusters."""
+    t = jnp.maximum(tasks, 0)                       # [R]
+    preds = wl.preds[t]                             # [R, MP]
+    pv = (jnp.arange(preds.shape[1])[None, :] < wl.n_preds[t][:, None])
+    pidx = jnp.maximum(preds, 0)
+    pfin = jnp.where(pv, s.finish[pidx], _NEG)      # [R, MP]
+    pkb = jnp.where(pv, wl.out_kb[pidx], 0.0)
+    pcl = p.pe_cluster[jnp.maximum(s.pe_of[pidx], 0)]          # [R, MP]
+    cross = pcl[:, :, None] != p.pe_cluster[None, None, :]     # [R, MP, P]
+    contrib = jnp.where(
+        pv[:, :, None],
+        pfin[:, :, None] + pkb[:, :, None] * p.us_per_kb * cross,
+        _NEG,
+    )                                               # [R, MP, P]
+    base = s.ready_base[t][:, None]                 # [R, 1]
+    return jnp.maximum(contrib.max(axis=1), base)   # [R, P]
+
+
+def _etf_choice(p: SimParams, wl: FlatWorkload, s: SimState):
+    """Earliest-finish-time (task, pe) over the ready buffer (Algorithm 1)."""
+    slot_ok = s.ready_ids >= 0                      # [R]
+    tasks = s.ready_ids
+    avail = _avail_with_comm(p, wl, s, tasks)       # [R, P]
+    exec_t = p.exec_pe[wl.task_type[jnp.maximum(tasks, 0)]]    # [R, P]
+    ft = jnp.maximum(jnp.maximum(avail, s.pe_free[None, :]), s.now) + exec_t
+    ft = jnp.where(slot_ok[:, None], ft, _INF)
+    flat = jnp.argmin(ft)
+    slot = flat // ft.shape[1]
+    pe = flat % ft.shape[1]
+    return slot.astype(jnp.int32), pe.astype(jnp.int32)
+
+
+def _lut_choice(p: SimParams, wl: FlatWorkload, s: SimState):
+    """Fast scheduler: FIFO head -> most-energy-efficient cluster -> its
+    earliest-free PE."""
+    slot = jnp.int32(0)
+    t = jnp.maximum(s.ready_ids[0], 0)
+    cl = p.lut_cluster[wl.task_type[t]]
+    free = jnp.where(p.cluster_pe_mask[cl], s.pe_free, _INF)
+    pe = jnp.argmin(free).astype(jnp.int32)
+    return slot, pe
+
+
+# ---------------------------------------------------------------------------
+# state mutations
+# ---------------------------------------------------------------------------
+def _push_ready(s: SimState, task: jax.Array, base: jax.Array,
+                do_push: jax.Array) -> SimState:
+    can = do_push & (s.ready_cnt < R_MAX)
+    idx = jnp.clip(s.ready_cnt, 0, R_MAX - 1)
+    ready_ids = jnp.where(
+        can, s.ready_ids.at[idx].set(task), s.ready_ids
+    )
+    return s._replace(
+        ready_ids=ready_ids,
+        ready_cnt=s.ready_cnt + can.astype(jnp.int32),
+        ready_drop=s.ready_drop + (do_push & ~can).astype(jnp.int32),
+        status=jnp.where(do_push, s.status.at[task].set(2), s.status),
+        ready_base=jnp.where(
+            do_push, s.ready_base.at[task].set(base), s.ready_base
+        ),
+    )
+
+
+def _pop_slot(s: SimState, slot: jax.Array) -> SimState:
+    """Remove `slot` keeping FIFO order (left shift of the tail)."""
+    ar = jnp.arange(R_MAX)
+    shifted = jnp.roll(s.ready_ids, -1)
+    ready_ids = jnp.where(ar >= slot, shifted, s.ready_ids)
+    ready_ids = ready_ids.at[R_MAX - 1].set(
+        jnp.where(slot < R_MAX, -1, ready_ids[R_MAX - 1])
+    )
+    return s._replace(ready_ids=ready_ids, ready_cnt=s.ready_cnt - 1)
+
+
+def _assign(p: SimParams, wl: FlatWorkload, s: SimState, slot: jax.Array,
+            pe: jax.Array, lat: jax.Array, sched_e: jax.Array,
+            is_slow: jax.Array, feats: jax.Array,
+            agree: jax.Array) -> SimState:
+    task = jnp.maximum(s.ready_ids[slot], 0)
+    sched_done = jnp.maximum(s.sched_free, s.now) + lat
+    avail = _avail_with_comm(p, wl, s, s.ready_ids)[slot, pe]
+    start = jnp.maximum(jnp.maximum(avail, s.pe_free[pe]),
+                        jnp.maximum(sched_done, s.now))
+    exec_t = p.exec_pe[wl.task_type[task], pe]
+    finish = start + exec_t
+    e_task = exec_t * p.pe_power[pe]
+    d = s.d_ptr
+    s = s._replace(
+        sched_free=sched_done,
+        status=s.status.at[task].set(3),
+        start=s.start.at[task].set(start),
+        finish=s.finish.at[task].set(finish),
+        pe_of=s.pe_of.at[task].set(pe),
+        pe_free=s.pe_free.at[pe].set(finish),
+        pe_busy=s.pe_busy.at[pe].add(exec_t),
+        task_energy=s.task_energy + e_task,
+        sched_energy=s.sched_energy + sched_e,
+        sched_time=s.sched_time + lat,
+        n_fast=s.n_fast + (1 - is_slow),
+        n_slow=s.n_slow + is_slow,
+        n_sched=s.n_sched + 1,
+        d_ptr=d + 1,
+        log_feat=s.log_feat.at[d].set(feats),
+        log_policy=s.log_policy.at[d].set(is_slow.astype(jnp.int8)),
+        log_agree=s.log_agree.at[d].set(agree.astype(jnp.int8)),
+        log_task=s.log_task.at[d].set(task),
+    )
+    return _pop_slot(s, slot)
+
+
+def _process_completion(p: SimParams, wl: FlatWorkload,
+                        s: SimState) -> SimState:
+    due = (s.status == 3) & (s.finish <= s.now)
+    t = jnp.argmin(jnp.where(due, s.finish, _INF)).astype(jnp.int32)
+    s = s._replace(status=s.status.at[t].set(4), n_done=s.n_done + 1)
+
+    def body(k, st):
+        succ = wl.succs[t, k]
+        valid = (k < wl.n_succs[t]) & (succ >= 0)
+        sc = jnp.maximum(succ, 0)
+        new_rem = st.pred_rem[sc] - 1
+        pred_rem = jnp.where(
+            valid, st.pred_rem.at[sc].set(new_rem), st.pred_rem
+        )
+        st = st._replace(pred_rem=pred_rem)
+        ready_now = valid & (new_rem == 0)
+        # availability (base) = max pred finish (all preds are done)
+        pr = wl.preds[sc]
+        pv = jnp.arange(pr.shape[0]) < wl.n_preds[sc]
+        base = jnp.where(pv, st.finish[jnp.maximum(pr, 0)], _NEG).max()
+        return _push_ready(st, sc, jnp.maximum(base, st.now), ready_now)
+
+    return jax.lax.fori_loop(0, wl.succs.shape[1], body, s)
+
+
+def _process_arrival(wl: FlatWorkload, s: SimState) -> SimState:
+    i = s.arr_ptr
+    t_arr = wl.inst_arrival[i]
+    s = s._replace(
+        arr_ptr=i + 1,
+        ring=s.ring.at[s.ring_ptr % RING].set(t_arr),
+        ring_ptr=s.ring_ptr + 1,
+        arr_count=s.arr_count + 1,
+    )
+
+    def body(k, st):
+        r = wl.inst_roots[i, k]
+        valid = (k < wl.inst_n_roots[i]) & (r >= 0)
+        return _push_ready(st, jnp.maximum(r, 0), t_arr, valid)
+
+    return jax.lax.fori_loop(0, wl.inst_roots.shape[1], body, s)
+
+
+# ---------------------------------------------------------------------------
+# the main loop
+# ---------------------------------------------------------------------------
+def _init_state(wl: FlatWorkload, n_pes: int) -> SimState:
+    T = wl.task_type.shape[0]
+    return SimState(
+        now=jnp.float32(0.0), sched_free=jnp.float32(0.0),
+        arr_ptr=jnp.int32(0), n_done=jnp.int32(0), n_sched=jnp.int32(0),
+        status=jnp.zeros(T, jnp.int8),
+        pred_rem=wl.n_preds.astype(jnp.int32),
+        ready_base=jnp.zeros(T, jnp.float32),
+        start=jnp.full(T, _INF), finish=jnp.full(T, _INF),
+        pe_of=jnp.full(T, -1, jnp.int32),
+        pe_free=jnp.zeros(n_pes, jnp.float32),
+        pe_busy=jnp.zeros(n_pes, jnp.float32),
+        ready_ids=jnp.full(R_MAX, -1, jnp.int32),
+        ready_cnt=jnp.int32(0), ready_drop=jnp.int32(0),
+        task_energy=jnp.float32(0.0), sched_energy=jnp.float32(0.0),
+        sched_time=jnp.float32(0.0),
+        n_fast=jnp.int32(0), n_slow=jnp.int32(0),
+        ring=jnp.zeros(RING, jnp.float32), ring_ptr=jnp.int32(0),
+        arr_count=jnp.int32(0),
+        d_ptr=jnp.int32(0),
+        log_feat=jnp.zeros((T, N_FEATURES), jnp.float32),
+        log_policy=jnp.zeros(T, jnp.int8),
+        log_agree=jnp.zeros(T, jnp.int8),
+        log_task=jnp.full(T, -1, jnp.int32),
+    )
+
+
+def _decide(mode: int, p: SimParams, wl: FlatWorkload, s: SimState,
+            tree: DTree, rate_threshold: jax.Array) -> SimState:
+    feats = _features(p, wl, s)
+    n = s.ready_cnt.astype(jnp.float32)
+    etf_lat = soc.etf_latency_us(n)
+    etf_e = etf_lat * soc.SCHED_POWER_W
+
+    if mode == MODE_LUT:
+        slot, pe = _lut_choice(p, wl, s)
+        return _assign(p, wl, s, slot, pe, jnp.float32(soc.LUT_LATENCY_US),
+                       jnp.float32(soc.LUT_ENERGY_UJ), jnp.int32(0), feats,
+                       jnp.int32(0))
+    if mode == MODE_ETF:
+        slot, pe = _etf_choice(p, wl, s)
+        return _assign(p, wl, s, slot, pe, etf_lat, etf_e, jnp.int32(1),
+                       feats, jnp.int32(0))
+    if mode == MODE_ETF_IDEAL:
+        slot, pe = _etf_choice(p, wl, s)
+        return _assign(p, wl, s, slot, pe, jnp.float32(0.0), jnp.float32(0.0),
+                       jnp.int32(1), feats, jnp.int32(0))
+    if mode == MODE_ORACLE:
+        # run both, follow the fast one, log whether they agree
+        slot_f, pe_f = _lut_choice(p, wl, s)
+        slot_s, pe_s = _etf_choice(p, wl, s)
+        agree = ((s.ready_ids[slot_f] == s.ready_ids[slot_s])
+                 & (pe_f == pe_s)).astype(jnp.int32)
+        return _assign(p, wl, s, slot_f, pe_f,
+                       jnp.float32(soc.LUT_LATENCY_US),
+                       jnp.float32(soc.LUT_ENERGY_UJ), jnp.int32(0), feats,
+                       agree)
+
+    if mode == MODE_DAS:
+        use_slow = tree.predict(feats).astype(bool)
+        cls_e = jnp.float32(soc.DAS_CLS_ENERGY_UJ)
+    elif mode == MODE_THRESHOLD:
+        use_slow = feats[FEAT_RATE] >= rate_threshold
+        cls_e = jnp.float32(0.0)
+    else:  # pragma: no cover
+        raise ValueError(f"unknown mode {mode}")
+
+    slot_f, pe_f = _lut_choice(p, wl, s)
+    slot_s, pe_s = _etf_choice(p, wl, s)
+    slot = jnp.where(use_slow, slot_s, slot_f)
+    pe = jnp.where(use_slow, pe_s, pe_f)
+    lat = jnp.where(use_slow, etf_lat, jnp.float32(soc.LUT_LATENCY_US))
+    e = jnp.where(use_slow, etf_e, jnp.float32(soc.LUT_ENERGY_UJ)) + cls_e
+    return _assign(p, wl, s, slot, pe, lat, e, use_slow.astype(jnp.int32),
+                   feats, jnp.int32(0))
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def simulate(mode: int, params: SimParams, wl: FlatWorkload,
+             tree: DTree, rate_threshold: jax.Array) -> SimResult:
+    T = wl.task_type.shape[0]
+    I = wl.inst_arrival.shape[0]
+    n_pes = params.pe_cluster.shape[0]
+    max_iters = 3 * T + I + 64
+
+    def cond(carry):
+        s, it = carry
+        return (s.n_done < wl.n_tasks) & (it < max_iters)
+
+    def body(carry):
+        s, it = carry
+        completion_due = jnp.any((s.status == 3) & (s.finish <= s.now))
+        arrival_due = (s.arr_ptr < wl.n_insts) & (
+            wl.inst_arrival[jnp.minimum(s.arr_ptr, I - 1)] <= s.now
+        )
+        can_decide = s.ready_cnt > 0
+
+        def do_completion(st):
+            return _process_completion(params, wl, st)
+
+        def do_arrival(st):
+            return _process_arrival(wl, st)
+
+        def do_decide(st):
+            return _decide(mode, params, wl, st, tree, rate_threshold)
+
+        def do_advance(st):
+            next_fin = jnp.where(st.status == 3, st.finish, _INF).min()
+            next_arr = jnp.where(
+                st.arr_ptr < wl.n_insts,
+                wl.inst_arrival[jnp.minimum(st.arr_ptr, I - 1)], _INF,
+            )
+            nxt = jnp.minimum(next_fin, next_arr)
+            # deadlock guard: if nothing is pending, jump past the horizon
+            nxt = jnp.where(jnp.isfinite(nxt), nxt, st.now)
+            return st._replace(now=jnp.maximum(nxt, st.now))
+
+        branch = jnp.where(
+            completion_due, 0,
+            jnp.where(arrival_due, 1, jnp.where(can_decide, 2, 3)),
+        )
+        s = jax.lax.switch(
+            branch, [do_completion, do_arrival, do_decide, do_advance], s
+        )
+        return (s, it + 1)
+
+    s0 = _init_state(wl, n_pes)
+    s, iters = jax.lax.while_loop(cond, body, (s0, jnp.int32(0)))
+
+    # per-instance latency: segment-max of finish over each instance's tasks
+    inst_fin = jnp.full(I, _NEG).at[wl.inst_id].max(
+        jnp.where(wl.task_valid, s.finish, _NEG)
+    )
+    inst_exec = jnp.where(
+        wl.inst_valid, inst_fin - wl.inst_arrival, jnp.nan
+    )
+    avg_exec = jnp.nanmean(inst_exec)
+    makespan = jnp.where(wl.task_valid, s.finish, _NEG).max()
+    total_e = s.task_energy + s.sched_energy
+    return SimResult(
+        avg_exec_us=avg_exec,
+        makespan_us=makespan,
+        total_energy_uj=total_e,
+        task_energy_uj=s.task_energy,
+        sched_energy_uj=s.sched_energy,
+        sched_time_us=s.sched_time,
+        edp=total_e * avg_exec,
+        n_decisions=s.d_ptr,
+        n_fast=s.n_fast,
+        n_slow=s.n_slow,
+        n_done=s.n_done,
+        ready_drop=s.ready_drop,
+        inst_exec_us=inst_exec,
+        log_feat=s.log_feat,
+        log_policy=s.log_policy,
+        log_agree=s.log_agree,
+        log_task=s.log_task,
+        finish=s.finish,
+        pe_of=s.pe_of,
+    )
+
+
+def to_device(wl: FlatWorkload) -> FlatWorkload:
+    return FlatWorkload(*[jnp.asarray(x) for x in wl])
+
+
+def run(mode: int, wl: FlatWorkload, params: SimParams | None = None,
+        tree: DTree | None = None,
+        rate_threshold: float = 1e9) -> SimResult:
+    """Convenience wrapper (host-side numpy workload ok)."""
+    params = params or make_params()
+    tree = tree or always_fast_tree()
+    return simulate(mode, params, to_device(wl), tree,
+                    jnp.float32(rate_threshold))

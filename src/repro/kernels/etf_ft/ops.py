@@ -1,0 +1,15 @@
+"""Jit'd wrapper for the ETF finish-time search kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.etf_ft import kernel, ref
+
+
+def etf_ft(avail, free, exec_t, now, *, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if interpret and avail.shape[0] > 64:
+        return ref.etf_ft_reference(avail, free, exec_t, now)
+    return kernel.etf_ft_search(avail, free, exec_t, now,
+                                interpret=interpret)

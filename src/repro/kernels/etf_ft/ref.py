@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the ETF finish-time search."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def etf_ft_reference(avail, free, exec_t, now):
+    """avail [B,R,P], free [B,P], exec_t [B,R,P], now [B] ->
+    (ft_min [B], slot [B], pe [B])."""
+    ft = jnp.maximum(jnp.maximum(avail, free[:, None, :]),
+                     now[:, None, None]) + exec_t
+    ft = jnp.where(jnp.isfinite(ft), ft, 3.4e38)
+    B, R, P = ft.shape
+    flat = ft.reshape(B, -1)
+    idx = jnp.argmin(flat, axis=1)
+    return (jnp.take_along_axis(flat, idx[:, None], 1)[:, 0],
+            idx // P, idx % P)

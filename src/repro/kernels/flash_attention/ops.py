@@ -1,0 +1,28 @@
+"""Jit'd public wrapper for the flash attention kernel.
+
+On TPU targets the Pallas kernel; everywhere else (CPU dry-run/tests) it
+falls back to the reference unless interpret mode is forced.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention import kernel, ref
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    block_q=128, block_k=128, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if interpret and jax.default_backend() != "tpu":
+        # CPU path: interpret-mode Pallas is O(grid) python -> use it only
+        # for small shapes (tests); otherwise the jnp oracle.
+        n_tiles = (q.shape[0] * k.shape[2]
+                   * max(q.shape[1] // block_q, 1)
+                   * max(q.shape[1] // block_k, 1))
+        if n_tiles > 4096:
+            return ref.mha_reference(q, k, v, causal=causal, window=window,
+                                     softcap=softcap)
+    return kernel.flash_attention_fwd(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, interpret=interpret)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def mha_reference(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """q [B,S,H,Dh], k/v [B,S,K,Dh] -> [B,S,H,Dh] (fp32 softmax)."""
+    B, S, H, Dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, Dh)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(Dh)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    pos = jnp.arange(S)
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok &= pos[None, :] <= pos[:, None]
+    if window:
+        ok &= pos[None, :] > pos[:, None] - window
+    s = jnp.where(ok[None, None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+    return out.reshape(B, S, H, Dh).astype(q.dtype)

@@ -1,0 +1,70 @@
+"""RG-LRU linear-recurrence kernel (TPU Pallas).
+
+h_t = a_t * h_{t-1} + b_t, per channel. The recurrence is inherently
+sequential in t but fully parallel over (batch, channel); the kernel tiles
+channels into lane-aligned VMEM blocks (block_c multiple of 128), carries
+h in VMEM scratch across sequential chunk grid steps, and walks time with
+a fori_loop of pure VPU ops — this layer is HBM-bandwidth-bound (state
+never leaves VMEM; a/b stream through once), which is the TPU-native
+adaptation of Griffin's custom scan.
+
+Grid = (batch, channel_blocks, time_chunks), time innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rg_kernel(a_ref, b_ref, y_ref, h_ref, *, chunk):
+    tb = pl.program_id(2)
+
+    @pl.when(tb == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[0].astype(jnp.float32)      # [Q, C]
+    b = b_ref[0].astype(jnp.float32)      # [Q, C]
+
+    def body(t, carry):
+        h, ybuf = carry
+        h = a[t] * h + b[t]
+        ybuf = jax.lax.dynamic_update_index_in_dim(ybuf, h, t, 0)
+        return h, ybuf
+
+    h0 = h_ref[0]
+    h, y = jax.lax.fori_loop(
+        0, chunk, body, (h0, jnp.zeros((chunk, a.shape[1]), jnp.float32)))
+    h_ref[0] = h
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "block_c", "interpret"))
+def rg_lru_fwd(a, b, *, chunk=128, block_c=512, interpret=False):
+    """a, b [B, S, C] -> h sequence [B, S, C] (fp32 math)."""
+    B, S, C = a.shape
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    block_c = min(block_c, C)
+    while C % block_c:
+        block_c //= 2
+    grid = (B, C // block_c, S // chunk)
+    return pl.pallas_call(
+        functools.partial(_rg_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_c), lambda b_, c, t: (b_, t, c)),
+            pl.BlockSpec((1, chunk, block_c), lambda b_, c, t: (b_, t, c)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, block_c),
+                               lambda b_, c, t: (b_, t, c)),
+        out_shape=jax.ShapeDtypeStruct((B, S, C), a.dtype),
+        scratch_shapes=[pltpu.VMEM((1, block_c), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,12 @@
+"""Jit'd wrapper for the RG-LRU scan kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rg_lru import kernel
+
+
+def rg_lru_scan(a, b, *, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return kernel.rg_lru_fwd(a, b, interpret=interpret)

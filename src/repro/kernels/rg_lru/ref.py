@@ -1,0 +1,18 @@
+"""Pure-jnp oracle: the defining sequential recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rg_lru_reference(a, b):
+    """a, b [B, S, C] -> h [B, S, C]; h_t = a_t h_{t-1} + b_t, h_{-1}=0."""
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+    xs = (a.transpose(1, 0, 2).astype(jnp.float32),
+          b.transpose(1, 0, 2).astype(jnp.float32))
+    h0 = jnp.zeros(a.shape[::2], jnp.float32)  # [B, C]
+    _, hs = jax.lax.scan(step, h0, xs)
+    return hs.transpose(1, 0, 2).astype(a.dtype)

@@ -1,0 +1,102 @@
+"""Mamba-2 SSD chunked-scan kernel (TPU Pallas).
+
+Grid = (batch, head, n_chunks); the chunk axis is innermost/sequential and
+the [N, P] inter-chunk state lives in VMEM scratch, so the recurrence never
+round-trips HBM. Within a chunk the dual ("attention-like") form runs on
+the MXU: (C B^T ⊙ L) (dt*X) with the cumulative-decay kernel L built from a
+within-chunk cumsum — chunk 128 x state 128 x headdim 64 tiles are MXU
+aligned and fit VMEM with room to spare.
+
+Inputs are pre-grouped per head (B/C already expanded to heads, group
+expansion happens in ops.py). All math fp32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, hlast_ref,
+                h_ref, *, chunk):
+    cb = pl.program_id(2)
+    n_cb = pl.num_programs(2)
+
+    @pl.when(cb == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    A = a_ref[0]                                        # scalar (per head)
+    x = x_ref[0, 0, 0].astype(jnp.float32)              # [Q, P]
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)            # [Q]
+    Bm = b_ref[0, 0, 0].astype(jnp.float32)             # [Q, N]
+    Cm = c_ref[0, 0, 0].astype(jnp.float32)             # [Q, N]
+
+    dA = dt * A                                         # [Q] (A < 0)
+    cum = jnp.cumsum(dA)                                # [Q]
+    seg = cum[:, None] - cum[None, :]                   # [Q, Q]
+    causal = (jax.lax.iota(jnp.int32, chunk)[:, None]
+              >= jax.lax.iota(jnp.int32, chunk)[None, :])
+    L = jnp.where(causal, jnp.exp(seg), 0.0)
+
+    xdt = x * dt[:, None]                               # [Q, P]
+    scores = (Cm @ Bm.T) * L                            # [Q, Q] (MXU)
+    y = scores @ xdt                                    # intra-chunk
+
+    h = h_ref[...]                                      # [N, P]
+    in_decay = jnp.exp(cum)                             # [Q]
+    y += (Cm * in_decay[:, None]) @ h                   # inter-chunk
+
+    decay_to_end = jnp.exp(cum[-1] - cum)               # [Q]
+    h_new = jnp.exp(cum[-1]) * h + (Bm * decay_to_end[:, None]).T @ xdt
+    h_ref[...] = h_new
+
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(cb == n_cb - 1)
+    def _finish():
+        hlast_ref[0, 0] = h_new.astype(hlast_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_fwd(x, dt, A, Bh, Ch, *, chunk=128, interpret=False):
+    """x [B,S,H,P], dt [B,S,H], A [H], Bh/Ch [B,S,H,N] (already per-head).
+    Returns (y [B,S,H,P], h_last [B,H,N,P])."""
+    B, S, H, P = x.shape
+    N = Bh.shape[-1]
+    assert S % chunk == 0
+    nc = S // chunk
+
+    xt = x.transpose(0, 2, 1, 3).reshape(B, H, nc, chunk, P)
+    dtt = dt.transpose(0, 2, 1).reshape(B, H, nc, chunk)
+    bt = Bh.transpose(0, 2, 1, 3).reshape(B, H, nc, chunk, N)
+    ct = Ch.transpose(0, 2, 1, 3).reshape(B, H, nc, chunk, N)
+
+    grid = (B, H, nc)
+    y, hlast = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, 1, 1, chunk, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, 1, chunk, N), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk, N), lambda b, h, c: (b, h, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, chunk, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, nc, chunk, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(A.astype(jnp.float32), xt, dtt, bt, ct)
+
+    y = y.reshape(B, H, S, P).transpose(0, 2, 1, 3)
+    return y, hlast

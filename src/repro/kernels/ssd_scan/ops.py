@@ -1,0 +1,22 @@
+"""Jit'd wrapper: expands B/C groups to heads and dispatches to the Pallas
+kernel (TPU) / interpret mode (tests) / the model's chunked-jnp fallback."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan import kernel
+
+
+def ssd(xh, dth, A, Bg, Cg, *, chunk=128, interpret=None):
+    """xh [B,S,H,P], dth [B,S,H], A [H], Bg/Cg [B,S,G,N] with H % G == 0.
+    Returns (y [B,S,H,P], h_last [B,H,N,P])."""
+    H = xh.shape[2]
+    G = Bg.shape[2]
+    rep = H // G
+    Bh = jnp.repeat(Bg, rep, axis=2)
+    Ch = jnp.repeat(Cg, rep, axis=2)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return kernel.ssd_fwd(xh, dth, A, Bh, Ch, chunk=chunk,
+                          interpret=interpret)

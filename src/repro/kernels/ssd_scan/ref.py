@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the SSD kernel: the sequential state recurrence
+   h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T ;  y_t = C_t h_t
+(the mathematically-defining form, O(S) scan — slow but unambiguous)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_reference(x, dt, A, Bh, Ch):
+    """x [B,S,H,P], dt [B,S,H], A [H], Bh/Ch [B,S,H,N] ->
+    (y [B,S,H,P], h_last [B,H,N,P])."""
+    B, S, H, P = x.shape
+    N = Bh.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                     # [B,H,P],[B,H],[B,H,N]
+        a = jnp.exp(dtt * A[None, :])             # [B,H]
+        upd = jnp.einsum("bhn,bhp->bhnp", bt, xt * dtt[..., None])
+        h = a[..., None, None] * h + upd
+        y = jnp.einsum("bhn,bhnp->bhp", ct, h)
+        return h, y
+
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          Bh.transpose(1, 0, 2, 3).astype(jnp.float32),
+          Ch.transpose(1, 0, 2, 3).astype(jnp.float32))
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), h_last

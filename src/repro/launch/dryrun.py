@@ -1,0 +1,384 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, proving the distribution config is coherent, and
+extract the memory/cost/collective analyses the roofline consumes.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] \
+      --out dryrun_results.json
+
+NOTE: the XLA_FLAGS line above MUST run before any other import (jax locks
+the device count on first init)."""
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np   # noqa: E402
+
+from repro import configs                      # noqa: E402
+from repro.launch import mesh as meshlib       # noqa: E402
+from repro.launch.shapes import SHAPES, applicable  # noqa: E402
+from repro.models import lm                    # noqa: E402
+from repro.parallel import sharding            # noqa: E402
+from repro.train import optimizer as optim     # noqa: E402
+from repro.train import train_step as ts       # noqa: E402
+
+
+def _abs_tree(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def abstract_params(cfg):
+    return jax.eval_shape(
+        lambda k: lm.lm_init(k, cfg), jax.random.PRNGKey(0))
+
+
+def input_specs(arch: str, shape_name: str, cfg=None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of the cell
+    (weak-type-correct, shardable, no device allocation)."""
+    cfg = cfg or configs.get_config(arch)
+    spec = SHAPES[shape_name]
+    B, S = spec.global_batch, spec.seq_len
+    i32 = jnp.int32
+    out: Dict[str, Any] = {"kind": spec.kind}
+
+    if spec.kind == "train":
+        n_pre = cfg.n_prefix_embeds
+        s_txt = S - n_pre
+        tok_shape = (B, cfg.n_codebooks, s_txt) if cfg.n_codebooks > 1 \
+            else (B, s_txt)
+        batch = {
+            "tokens": jax.ShapeDtypeStruct(tok_shape, i32),
+            "labels": jax.ShapeDtypeStruct(tok_shape, i32),
+        }
+        if n_pre:
+            batch["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (B, n_pre, cfg.d_model), jnp.bfloat16)
+        out["batch"] = batch
+        return out
+
+    if spec.kind == "prefill":
+        n_pre = cfg.n_prefix_embeds
+        s_txt = S - n_pre
+        tok_shape = (B, cfg.n_codebooks, s_txt) if cfg.n_codebooks > 1 \
+            else (B, s_txt)
+        out["tokens"] = jax.ShapeDtypeStruct(tok_shape, i32)
+        if n_pre:
+            out["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (B, n_pre, cfg.d_model), jnp.bfloat16)
+        out["caches"] = _abs_tree(
+            jax.eval_shape(lambda: lm.init_caches(cfg, B, S)))
+        return out
+
+    # decode: one new token against a cache of size S
+    tok_shape = (B, cfg.n_codebooks) if cfg.n_codebooks > 1 else (B,)
+    out["token"] = jax.ShapeDtypeStruct(tok_shape, i32)
+    out["pos"] = S - 1
+    out["kv_valid"] = jax.ShapeDtypeStruct((B,), i32)
+    out["caches"] = _abs_tree(
+        jax.eval_shape(lambda: lm.init_caches(cfg, B, S)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# collective-bytes extraction from the (possibly partitioned) HLO text
+# ---------------------------------------------------------------------------
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+
+def _bytes_of_shape(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum of *output* shape bytes per collective kind, parsed from the
+    SPMD-partitioned HLO (shapes are already per-partition). HLO line
+    format: `%name = TYPE[dims]{layout} all-gather(%args...)`. `-start`
+    variants are counted; `-done` ops (which repeat the shape) are not."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        rhs = line.split("=", 1)[1]
+        head = rhs.split("(", 1)[0]           # "TYPE[dims]{l} opname"
+        kind = None
+        for k in _COLL_KINDS:
+            token = head.strip().split()[-1] if head.strip() else ""
+            if token == k or token == k + "-start":
+                kind = k
+                break
+        if kind is None:
+            continue
+        shapes = _SHAPE_RE.findall(head)
+        nbytes = sum(_bytes_of_shape(dt, dims) for dt, dims in shapes)
+        out[kind] = out.get(kind, 0) + nbytes
+    return out
+
+
+def _summarize_memory(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = float(v)
+    return out
+
+
+def production_variant(arch: str, shape_name: str, cfg) -> dict:
+    """The per-arch 'optimized' profile: every §Perf-confirmed win that
+    generalized (EXPERIMENTS.md §Perf extension table).
+      * MoE archs: shard-local dispatch (moe_shards=16, 4-6x less coll)
+      * train cells: dots-remat (no fwd recompute; useful ~0.95)
+      * mamba2: sequence parallelism off (residual gathers dominate at
+        d_model=1536)
+      * serve cells: bf16 checkpoint; MLA archs decode weight-absorbed
+      * train: bf16 weights + fp32 masters in optimizer state
+    """
+    from repro.launch.shapes import SHAPES
+    v: dict = {}
+    kind = SHAPES[shape_name].kind
+    if cfg.mlp_type == "moe" and kind != "decode":
+        # decode batches are tiny (8 tokens/group): shard-local dispatch
+        # pads min-capacity buffers and REGRESSES 3-20x — measured, so
+        # decode keeps the global sort.
+        v["moe_shards"] = 16
+    if kind == "train":
+        if arch != "recurrentgemma-9b":   # dots-remat: -2% there, + else
+            v["remat"] = "dots"
+        v["bf16_params"] = True
+        if arch == "mamba2-780m":
+            v["sequence_parallel"] = False
+    else:
+        v["bf16_params"] = True
+        if cfg.attn_impl == "mla" and kind == "decode":
+            v["mla_absorb"] = True
+    return v
+
+
+def apply_variant(cfg, variant: Optional[dict]):
+    """Apply a §Perf variant to the model config. Keys:
+    remat, moe_shards, mla_absorb, use_pallas (model-level);
+    cast_params, sequence_parallel (train-step level, consumed by
+    lower_cell)."""
+    import dataclasses
+    if not variant:
+        return cfg
+    upd = {}
+    for k in ("remat", "mla_absorb", "use_pallas", "shard_strategy"):
+        if k in variant:
+            upd[k] = variant[k]
+    if "moe_shards" in variant and cfg.moe is not None:
+        upd["moe"] = dataclasses.replace(
+            cfg.moe, n_dispatch_shards=variant["moe_shards"])
+    return dataclasses.replace(cfg, **upd) if upd else cfg
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool = False,
+               cfg=None, opt_override: Optional[dict] = None,
+               variant: Optional[dict] = None):
+    """Build + lower the cell's step function. Returns (lowered, meta)."""
+    cfg = cfg or configs.get_config(arch)
+    cfg = apply_variant(cfg, variant)
+    variant = variant or {}
+    skip = applicable(cfg, shape_name)
+    if skip:
+        raise ValueError(f"cell skipped: {skip}")
+    mesh = meshlib.make_production_mesh(multi_pod=multi_pod)
+    spec = input_specs(arch, shape_name, cfg)
+    params_abs = abstract_params(cfg)
+    if variant.get("bf16_params") and spec["kind"] != "train":
+        # serving from a bf16 checkpoint (production inference default)
+        params_abs = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, jnp.bfloat16 if s.dtype == jnp.float32
+                else s.dtype), params_abs)
+
+    if spec["kind"] == "train":
+        if variant.get("bf16_params"):
+            params_abs = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(
+                    s.shape, jnp.bfloat16 if s.dtype == jnp.float32
+                    else s.dtype), params_abs)
+            opt_abs = jax.eval_shape(
+                lambda p: optim.adamw_init(p, keep_master=True), params_abs)
+        else:
+            opt_abs = jax.eval_shape(optim.adamw_init, params_abs)
+        opt_cfg = optim.AdamWConfig(**(opt_override or {}))
+        # sequence parallelism on by default: per-layer saved residuals
+        # otherwise replicate the seq dim across "model" (16x activation
+        # memory; measured 40GB/dev on phi3/train_4k without SP).
+        _, jit_builder = ts.make_train_step(
+            cfg, opt_cfg, mesh,
+            sequence_parallel=variant.get("sequence_parallel", True),
+            cast_params=variant.get("cast_params"))
+        jitted = jit_builder(params_abs, opt_abs, spec["batch"])
+        with mesh:
+            lowered = jitted.lower(params_abs, opt_abs, spec["batch"])
+    elif spec["kind"] == "prefill":
+        _, jit_builder = ts.make_serve_step(cfg, mesh, kind="prefill")
+        jitted = jit_builder(params_abs, spec["caches"], spec["tokens"],
+                             prefix_abs=spec.get("prefix_embeds"))
+        with mesh:
+            if "prefix_embeds" in spec:
+                lowered = jitted.lower(params_abs, spec["tokens"],
+                                       spec["caches"],
+                                       spec["prefix_embeds"])
+            else:
+                lowered = jitted.lower(params_abs, spec["tokens"],
+                                       spec["caches"])
+    else:
+        _, jit_builder = ts.make_serve_step(cfg, mesh, kind="decode")
+        jitted = jit_builder(params_abs, spec["caches"], spec["token"])
+        with mesh:
+            lowered = jitted.lower(params_abs, spec["token"], spec["pos"],
+                                   spec["caches"], spec["kv_valid"])
+    meta = {"arch": arch, "shape": shape_name, "kind": spec["kind"],
+            "multi_pod": multi_pod,
+            "n_devices": int(np.prod(list(mesh.shape.values())))}
+    return lowered, meta
+
+
+def model_flops_for_cell(cfg, shape_name: str) -> Dict[str, float]:
+    """Analytic MODEL_FLOPS: 6*N_active*tokens (train) / 2*N_active*tokens
+    (inference), the paper-standard accounting used for the §Roofline
+    useful-compute ratio."""
+    from repro.launch.shapes import SHAPES
+    spec = SHAPES[shape_name]
+    params_abs = abstract_params(cfg)
+    n_total = lm.param_count(params_abs)
+    n_active = lm.active_param_count(cfg, params_abs)
+    if spec.kind == "train":
+        tokens = spec.global_batch * spec.seq_len
+        mf = 6.0 * n_active * tokens
+    elif spec.kind == "prefill":
+        tokens = spec.global_batch * spec.seq_len
+        mf = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        mf = 2.0 * n_active * spec.global_batch
+    return {"n_params": float(n_total), "n_active_params": float(n_active),
+            "model_flops_global": mf}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             verbose: bool = True, deep_analysis: bool = True,
+             variant: Optional[dict] = None) -> Dict[str, Any]:
+    t0 = time.time()
+    cfg = apply_variant(configs.get_config(arch), variant)
+    skip = applicable(cfg, shape_name)
+    if skip:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped", "reason": skip}
+    lowered, meta = lower_cell(arch, shape_name, multi_pod, cfg=cfg,
+                               variant=variant)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    res: Dict[str, Any] = dict(meta)
+    res["status"] = "ok"
+    res["lower_s"] = round(t_lower, 1)
+    res["compile_s"] = round(t_compile, 1)
+    res["xla_flops"] = float(cost.get("flops", -1.0))
+    res["xla_bytes"] = float(cost.get("bytes accessed", -1.0))
+    res["memory"] = _summarize_memory(compiled)
+    res.update(model_flops_for_cell(cfg, shape_name))
+    if deep_analysis:
+        from repro.launch import hlo_analysis
+        h = hlo_analysis.analyze(compiled.as_text())
+        res["dot_flops_per_dev"] = h["dot_flops"]
+        res["dot_bytes_per_dev"] = h["dot_bytes"]
+        res["collective_bytes"] = h["collective_bytes"]
+        res["collective_bytes_tpu"] = h["collective_bytes_tpu"]
+        res["n_while"] = h["n_while"]
+    else:
+        res["collective_bytes"] = collective_bytes(compiled.as_text())
+    if verbose:
+        ma = res["memory"]
+        per_dev = (ma.get("argument_size_in_bytes", 0)
+                   + ma.get("temp_size_in_bytes", 0)) / 1e9
+        print(f"[{arch} x {shape_name} x "
+              f"{'2pod' if multi_pod else '1pod'}] ok "
+              f"lower {t_lower:.0f}s compile {t_compile:.0f}s "
+              f"dotflops/dev {res.get('dot_flops_per_dev', -1):.3g} "
+              f"mem/dev {per_dev:.2f}GB "
+              f"coll {sum(res['collective_bytes'].values())/1e9:.3f}GB")
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--profile", default="baseline",
+                    choices=["baseline", "optimized"])
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells_to_run = []
+    archs = configs.ARCH_IDS if (args.all or args.arch is None) \
+        else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells_to_run.append((a, s, mp))
+
+    results = []
+    for a, s, mp in cells_to_run:
+        try:
+            variant = None
+            if args.profile == "optimized":
+                variant = production_variant(a, s, configs.get_config(a))
+            res = run_cell(a, s, multi_pod=mp, variant=variant)
+            res["profile"] = args.profile
+            results.append(res)
+        except Exception as e:  # a failing cell is a bug; record it
+            print(f"[{a} x {s} x {'2pod' if mp else '1pod'}] FAILED: {e}")
+            results.append({"arch": a, "shape": s, "multi_pod": mp,
+                            "status": "failed", "error": str(e)[:2000]})
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_fail = sum(r["status"] == "failed" for r in results)
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped (documented), "
+          f"{n_fail} FAILED of {len(results)}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

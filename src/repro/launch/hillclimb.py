@@ -1,0 +1,152 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver: per-iteration hypothesis -> change -> re-lower ->
+re-analyse on the three selected cells. Results accumulate into
+hillclimb_results.json; the narrative lands in EXPERIMENTS.md §Perf."""
+
+import json          # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+
+from repro.launch import dryrun, roofline  # noqa: E402
+
+# (cell, variant-name, variant dict, hypothesis)
+EXPERIMENTS = [
+    # --- iteration 6 (deepseek): top_collectives after localsort shows
+    #     (a) 6x 14GB seq-gathers of the EXPANDED MLA K/V ([B,S,H,128]),
+    #     (b) 2x 7GB full-gathers of router probs at the flat top_k.
+    #     Changes: head-sharded constraints on expanded K/V + queries
+    #     (H=16 divides the model axis), grouped [G,Tl,E] router top_k. --
+    ("deepseek-v2-lite-16b", "train_4k", "headshard+localsort",
+     {"moe_shards": 16},
+     "head-sharded MLA expansion + shard-local router top_k: collective "
+     "1.58 -> ~0.5-0.7s"),
+    # --- iteration 5: measurement correction. Tracing the f32 gathers to
+    #     their producers showed XLA:CPU's FloatNormalization stores every
+    #     bf16 value as f32 (convert chains around each use), so observed
+    #     collective/dot bytes are 2x what a TPU lowering moves. The
+    #     analyzer now halves f32 tensors with bf16 provenance
+    #     (collective_bytes_tpu). Re-measure the winners. -----------------
+    ("qwen2-72b", "train_4k", "tpu-dtype+dots", {"remat": "dots"},
+     "TPU-native byte accounting: collective 14.07 -> ~7s (<= compute "
+     "9.58s) => compute-bound, RF ~0.8"),
+    ("deepseek-v2-lite-16b", "train_4k", "tpu-dtype+localsort",
+     {"moe_shards": 16},
+     "TPU-native accounting on the local-sort dispatch: coll 2.58 -> "
+     "~1.3-1.6s"),
+    ("minicpm3-4b", "decode_32k", "tpu-dtype+absorb", {"mla_absorb": True},
+     "TPU-native accounting on absorbed decode: step bound ~halves"),
+    # --- iteration 4: the top_collectives dump shows the dominant traffic
+    #     is fp32 PARAM shards moving through model/data-axis gathers (the
+    #     masters are fp32 at rest and XLA does not reliably sink converts
+    #     below the partitioner's gathers). Deterministic fix: bf16 weights
+    #     + fp32 masters inside the optimizer state. -----------------------
+    ("qwen2-72b", "train_4k", "bf16params",
+     {"bf16_params": True},
+     "bf16 weights (fp32 masters in opt state): every param gather/reduce "
+     "halves => collective 14.07 -> ~7-8s"),
+    ("qwen2-72b", "train_4k", "bf16params+dots",
+     {"bf16_params": True, "remat": "dots"},
+     "stack the compute win: expect compute ~9.6s > collective => "
+     "compute-bound, RF ~0.75"),
+    ("deepseek-v2-lite-16b", "train_4k", "bf16params+localsort",
+     {"bf16_params": True, "moe_shards": 16},
+     "bf16 params + local dispatch: collective 2.58 -> ~1.3-1.8s"),
+    ("minicpm3-4b", "decode_32k", "bf16serve+absorb",
+     {"bf16_params": True, "mla_absorb": True},
+     "serve bf16 checkpoint on the absorbed decode: param collectives "
+     "halve => step bound 0.020 -> ~0.010s"),
+    # --- iteration 3 (after the preferred_element_type code fix): dots now
+    #     accumulate fp32 WITHOUT upcasting operands, so the partitioner
+    #     moves bf16. Hypothesis: every activation/weight collective around
+    #     attention + MLP dots halves => qwen2 coll 14.07 -> ~7s
+    #     (compute-bound), dsv2 localsort 2.58 -> ~1.4s. -----------------
+    ("qwen2-72b", "train_4k", "pet-bf16", {},
+     "preferred_element_type fix: f32 operand upcasts around dots removed "
+     "=> collective bytes halve, flips qwen2 to compute-bound"),
+    ("qwen2-72b", "train_4k", "pet-bf16+dots", {"remat": "dots"},
+     "stack the remat=dots win (compute 11.92->9.58) on the bf16 "
+     "collectives"),
+    ("deepseek-v2-lite-16b", "train_4k", "pet+localsort",
+     {"moe_shards": 16},
+     "bf16 dot operands + local dispatch: collective 2.58 -> ~1.4s"),
+    ("minicpm3-4b", "decode_32k", "pet+absorb", {"mla_absorb": True},
+     "bf16 score dots on the absorbed decode path: collective 0.020 -> "
+     "~0.010s"),
+    # --- cell A: qwen2-72b x train_4k (largest dense; collective-bound,
+    #     baseline compute 11.92s vs coll 14.07s) --------------------------
+    ("qwen2-72b", "train_4k", "base", {},
+     "baseline: fp32 param gathers + fp32 grad reduce dominate ICI"),
+    ("qwen2-72b", "train_4k", "bf16cast", {"cast_params": "bfloat16"},
+     "cast fp32 masters to bf16 BEFORE the FSDP all-gather: param-gather "
+     "and grad-reduce bytes halve => collective ~14->~7s, flips to "
+     "compute-bound"),
+    ("qwen2-72b", "train_4k", "bf16cast+dots",
+     {"cast_params": "bfloat16", "remat": "dots"},
+     "save matmul operands instead of full remat: no fwd recompute in bwd "
+     "=> dot_flops -~25%, param re-gathers in bwd disappear (fewer "
+     "collectives), at higher activation memory"),
+    # --- cell B: deepseek-v2-lite x train_4k (MoE; most collective-bound:
+    #     coll 10.66s vs compute 0.55s = 19x) ------------------------------
+    ("deepseek-v2-lite-16b", "train_4k", "base", {},
+     "baseline: global argsort dispatch emits giant sort collectives"),
+    ("deepseek-v2-lite-16b", "train_4k", "localsort", {"moe_shards": 16},
+     "shard-local dispatch sort (G=16 aligned with DP): sort/cumsum/"
+     "scatter become shard-local; only the token->expert all-to-all "
+     "remains => collective drops ~5-10x"),
+    ("deepseek-v2-lite-16b", "train_4k", "localsort+bf16",
+     {"moe_shards": 16, "cast_params": "bfloat16"},
+     "add the bf16 gather cast on top: param/grad collective halves too"),
+    # --- cell C: minicpm3-4b x decode_32k (worst roofline fraction; MLA
+    #     expansion recomputes K/V from the whole cache every step) --------
+    ("minicpm3-4b", "decode_32k", "base", {},
+     "baseline: per-step up-projection of the full 32k latent cache "
+     "(useful_ratio 0.002)"),
+    ("minicpm3-4b", "decode_32k", "absorb", {"mla_absorb": True},
+     "weight-absorbed MLA decode: attention runs in the compressed latent "
+     "space; per-step flops drop O(S*R*H*(dn+dv)) -> O(S*H*R), cache "
+     "traffic one read"),
+]
+
+
+def main(out_path="/root/repo/hillclimb_results.json", only=None):
+    results = []
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["variant"]) for r in results}
+    for arch, shape, vname, variant, hypothesis in EXPERIMENTS:
+        if only and vname not in only and arch not in only:
+            continue
+        if (arch, shape, vname) in done:
+            continue
+        t0 = time.time()
+        print(f"\n=== {arch} x {shape} [{vname}] ===")
+        print(f"hypothesis: {hypothesis}")
+        try:
+            cell = dryrun.run_cell(arch, shape, multi_pod=False,
+                                   variant=variant)
+            terms = roofline.roofline_terms(cell)
+            rec = {"arch": arch, "shape": shape, "variant": vname,
+                   "hypothesis": hypothesis, "variant_cfg": variant,
+                   "cell": cell, "terms": terms,
+                   "wall_s": round(time.time() - t0, 1)}
+            print(f"  compute {terms['compute_s']:.3f}s | memory "
+                  f"{terms['memory_s']:.3f}s | collective "
+                  f"{terms['collective_s']:.3f}s | bound "
+                  f"{terms['dominant']} | RF {terms['roofline_fraction']:.3f}"
+                  f" | useful {terms['useful_ratio']:.3f}")
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape, "variant": vname,
+                   "hypothesis": hypothesis, "error": str(e)[:1000]}
+            print(f"  FAILED: {e}")
+        results.append(rec)
+        with open(out_path, "w") as f:
+            json.dump(results, f, indent=1)
+    print(f"\nwrote {out_path}")
+
+
+if __name__ == "__main__":
+    main(only=set(sys.argv[1:]) or None)

@@ -1,0 +1,137 @@
+"""Roofline analysis over the dry-run artifacts.
+
+Per (arch x shape x mesh) cell, three per-chip time bounds (TPU v5e):
+
+  compute_s    = dot_flops_per_dev / PEAK_FLOPS_BF16
+  memory_s     = dot_bytes_per_dev / HBM_BW
+  collective_s = collective_bytes_per_dev / ICI_BW
+
+dot_flops / dot_bytes are trip-count-weighted matmul FLOPs / operand+output
+bytes parsed from the partitioned HLO (launch.hlo_analysis) — XLA's own
+cost_analysis counts scan bodies once and is unusable here (verified).
+dot_bytes is an HBM-traffic model that assumes perfect fusion of
+elementwise chains into the matmuls; collective bytes are per-chip output
+shapes of all all-gather/all-reduce/reduce-scatter/all-to-all/
+collective-permute ops, trip-weighted.
+
+The dominant term is the bottleneck; `useful_ratio` =
+MODEL_FLOPS / (dot_flops * n_devices) exposes remat/padding/attention
+overhead versus the 6*N*D (or 2*N*D) ideal.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, List, Optional
+
+from repro.launch import mesh as meshlib
+
+
+def roofline_terms(cell: Dict[str, Any]) -> Optional[Dict[str, Any]]:
+    if cell.get("status") != "ok" or "dot_flops_per_dev" not in cell:
+        return None
+    n_dev = cell["n_devices"]
+    compute_s = cell["dot_flops_per_dev"] / meshlib.PEAK_FLOPS_BF16
+    memory_s = cell["dot_bytes_per_dev"] / meshlib.HBM_BW
+    # TPU-native byte accounting when available (the CPU backend's float
+    # normalization stores bf16 as f32, doubling observed collectives)
+    coll_bytes = sum(cell.get("collective_bytes_tpu",
+                              cell["collective_bytes"]).values())
+    collective_s = coll_bytes / meshlib.ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    model_flops_per_dev = cell["model_flops_global"] / n_dev
+    useful_ratio = (model_flops_per_dev / cell["dot_flops_per_dev"]
+                    if cell["dot_flops_per_dev"] else 0.0)
+    # fraction of peak the chip would sustain if the dominant bound holds
+    mfu_bound = model_flops_per_dev / meshlib.PEAK_FLOPS_BF16 / step_s \
+        if step_s else 0.0
+    return {
+        **terms,
+        "dominant": dominant,
+        "step_time_bound_s": step_s,
+        "useful_ratio": useful_ratio,
+        "roofline_fraction": mfu_bound,
+        "coll_bytes_per_dev": coll_bytes,
+    }
+
+
+def build_table(results: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
+    rows = []
+    for cell in results:
+        if cell.get("status") == "skipped":
+            rows.append({"arch": cell["arch"], "shape": cell["shape"],
+                         "mesh": "2pod" if cell["multi_pod"] else "1pod",
+                         "status": "skipped"})
+            continue
+        t = roofline_terms(cell)
+        if t is None:
+            rows.append({"arch": cell["arch"], "shape": cell["shape"],
+                         "mesh": "2pod" if cell.get("multi_pod") else "1pod",
+                         "status": cell.get("status", "?")})
+            continue
+        rows.append({
+            "arch": cell["arch"], "shape": cell["shape"],
+            "mesh": "2pod" if cell["multi_pod"] else "1pod",
+            "status": "ok", **t,
+            "n_active_params": cell["n_active_params"],
+            "arg_gb_per_dev": cell["memory"].get(
+                "argument_size_in_bytes", 0) / 1e9,
+        })
+    return rows
+
+
+def format_table(rows: List[Dict[str, Any]], mesh: str = "1pod") -> str:
+    hdr = (f"{'arch':22s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s}"
+           f" {'coll_s':>10s} {'bound':>12s} {'useful':>7s} {'RF':>6s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("status") == "skipped":
+            lines.append(f"{r['arch']:22s} {r['shape']:12s} "
+                         f"{'— skipped (sub-quadratic rule)':>40s}")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"{r['arch']:22s} {r['shape']:12s} {r['status']}")
+            continue
+        lines.append(
+            f"{r['arch']:22s} {r['shape']:12s} {r['compute_s']:10.4f} "
+            f"{r['memory_s']:10.4f} {r['collective_s']:10.4f} "
+            f"{r['dominant'][:-2]:>12s} {r['useful_ratio']:7.3f} "
+            f"{r['roofline_fraction']:6.3f}")
+    return "\n".join(lines)
+
+
+def pick_hillclimb_cells(rows: List[Dict[str, Any]]) -> Dict[str, Any]:
+    ok = [r for r in rows if r.get("status") == "ok"
+          and r.get("mesh") == "1pod"]
+    worst_rf = min(ok, key=lambda r: r["roofline_fraction"])
+    coll_bound = [r for r in ok if r["dominant"] == "collective_s"]
+    most_coll = max(coll_bound or ok,
+                    key=lambda r: r["collective_s"]
+                    / max(r["step_time_bound_s"], 1e-12))
+    return {"worst_roofline": worst_rf, "most_collective": most_coll}
+
+
+def main(path: str = "/root/repo/dryrun_results.json"):
+    with open(path) as f:
+        results = json.load(f)
+    rows = build_table(results)
+    print("single-pod (16x16 = 256 chips):")
+    print(format_table(rows, "1pod"))
+    print("\nmulti-pod (2x16x16 = 512 chips):")
+    print(format_table(rows, "2pod"))
+    picks = pick_hillclimb_cells(rows)
+    print("\nhillclimb candidates:")
+    for k, r in picks.items():
+        print(f"  {k}: {r['arch']} x {r['shape']} "
+              f"(RF {r['roofline_fraction']:.3f}, "
+              f"dominant {r['dominant']})")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(*sys.argv[1:])

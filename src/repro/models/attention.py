@@ -1,0 +1,211 @@
+"""GQA/MQA/MHA attention with causal / sliding-window / prefix-LM masks,
+a KV-cache decode path, and an optional Pallas flash kernel.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import modules as nn
+
+
+class KVCache(NamedTuple):
+    k: jax.Array       # [B, S_max, K, Dh]
+    v: jax.Array       # [B, S_max, K, Dh]
+
+    @staticmethod
+    def init(batch, max_len, n_kv, d_head, dtype=jnp.bfloat16):
+        shape = (batch, max_len, n_kv, d_head)
+        return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+class WindowKVCache(NamedTuple):
+    """Ring buffer holding only the trailing `W` positions (local attn)."""
+    k: jax.Array       # [B, W, K, Dh]
+    v: jax.Array       # [B, W, K, Dh]
+    pos: jax.Array     # [W] absolute positions (-1 = empty slot)
+
+    @staticmethod
+    def init(batch, window, n_kv, d_head, dtype=jnp.bfloat16):
+        shape = (batch, window, n_kv, d_head)
+        return WindowKVCache(jnp.zeros(shape, dtype),
+                             jnp.zeros(shape, dtype),
+                             jnp.full((window,), -1, jnp.int32))
+
+    def update(self, k, v, cache_pos):
+        """Write the last min(S, W) tokens of k/v (absolute start
+        cache_pos) into the ring. Returns the new cache."""
+        B, S = k.shape[0], k.shape[1]
+        W = self.k.shape[1]
+        T = min(S, W)
+        src0 = S - T
+        new_abs = cache_pos + src0 + jnp.arange(T, dtype=jnp.int32)
+        slots = new_abs % W
+        nk = self.k.at[:, slots].set(k[:, src0:].astype(self.k.dtype))
+        nv = self.v.at[:, slots].set(v[:, src0:].astype(self.v.dtype))
+        npos = self.pos.at[slots].set(new_abs)
+        return WindowKVCache(nk, nv, npos)
+
+
+def attn_init(key, cfg):
+    ks = jax.random.split(key, 4)
+    d, h, k_, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    p = {
+        "wq": nn.dense_init(ks[0], d, (h, dh)),
+        "wk": nn.dense_init(ks[1], d, (k_, dh)),
+        "wv": nn.dense_init(ks[2], d, (k_, dh)),
+        "wo": nn.dense_init(ks[3], h * dh, d, std=1.0 / np.sqrt(h * dh)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, dh))
+        p["bk"] = jnp.zeros((k_, dh))
+        p["bv"] = jnp.zeros((k_, dh))
+    return p
+
+
+def _mask_bias(q_pos, kv_pos, window: int, prefix_len=None):
+    """Additive mask bias [B, 1, Sq, Skv] (0 or -inf).
+
+    q_pos/kv_pos: [B, Sq] / [B, Skv] absolute positions (-1 = invalid slot).
+    window > 0 limits attention to the trailing `window` positions.
+    prefix_len [B] (optional): bidirectional attention within the prefix.
+    """
+    q = q_pos[:, :, None]            # [B, Sq, 1]
+    k = kv_pos[:, None, :]           # [B, 1, Skv]
+    ok = (k <= q) & (k >= 0)
+    if window:
+        ok &= k > q - window
+    if prefix_len is not None:
+        pl = prefix_len[:, None, None]
+        ok |= (k < pl) & (q < pl) & (k >= 0)
+    return jnp.where(ok, 0.0, -jnp.inf)[:, None, :, :].astype(jnp.float32)
+
+
+def sdpa(q, k, v, bias, softcap: float = 0.0):
+    """q [B,Sq,H,Dh], k/v [B,Skv,K,Dh] with H = K*G. Returns [B,Sq,H,Dh].
+
+    Scores accumulate in fp32 via preferred_element_type (NOT a post-cast:
+    a cast after the dot makes XLA upcast the dot *operands* to f32, which
+    doubles every collective the partitioner inserts around the einsum —
+    measured 2x on the dry-run; see EXPERIMENTS.md §Perf)."""
+    B, Sq, H, Dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    q = q.reshape(B, Sq, K, G, Dh)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / np.sqrt(Dh)
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    scores = scores + bias[:, :, None, :, :]      # bias [B,1,Sq,Skv]
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return out.reshape(B, Sq, H, Dh)
+
+
+def attn_apply(p, cfg, x, positions, prefix_len=None, window: int = 0,
+               cache: Optional[KVCache] = None, cache_pos=None,
+               kv_valid=None):
+    """Full attention forward.
+
+    Training/prefill: cache=None, x [B, S, D].
+    With cache: appends K/V at scalar offset `cache_pos` and attends over
+    the cache; `kv_valid` [B] bounds each row's valid cache length
+    (defaults to cache_pos + S).
+    """
+    q = nn.linear(x, p["wq"], p.get("bq"))        # [B,S,H,Dh]
+    k = nn.linear(x, p["wk"], p.get("bk"))
+    v = nn.linear(x, p["wv"], p.get("bv"))
+    q = nn.apply_rope(q, positions, cfg.rope_theta, cfg.rotary_pct)
+    k = nn.apply_rope(k, positions, cfg.rope_theta, cfg.rotary_pct)
+
+    if cache is None:
+        bias = _mask_bias(positions, positions, window, prefix_len)
+        out = _sdpa_dispatch(cfg, q, k, v, bias, positions, window,
+                             prefix_len)
+    elif isinstance(cache, WindowKVCache):
+        S = x.shape[1]
+        cache = cache.update(k, v, cache_pos)
+        if S > 1:
+            # windowed prefill: attend within the fresh sequence only
+            # (window <= S assumed; the ring now holds the trailing W)
+            bias = _mask_bias(positions, positions, window, prefix_len)
+            out = _sdpa_dispatch(cfg, q, k, v, bias, positions, window,
+                                 prefix_len)
+        else:
+            if kv_valid is None:
+                kv_valid = (jnp.zeros((x.shape[0],), jnp.int32)
+                            + cache_pos + S)
+            kv_pos = jnp.broadcast_to(cache.pos[None],
+                                      (x.shape[0], cache.pos.shape[0]))
+            kv_pos = jnp.where((kv_pos >= 0) & (kv_pos < kv_valid[:, None]),
+                               kv_pos, -1)
+            bias = _mask_bias(positions, kv_pos, window, prefix_len)
+            out = sdpa(q, cache.k, cache.v, bias, cfg.logit_softcap)
+    else:
+        S = x.shape[1]
+        S_max = cache.k.shape[1]
+        newk = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k.astype(cache.k.dtype), cache_pos, axis=1)
+        newv = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v.astype(cache.v.dtype), cache_pos, axis=1)
+        cache = KVCache(newk, newv)
+        if kv_valid is None:
+            kv_valid = jnp.full((x.shape[0],), 0, jnp.int32) + cache_pos + S
+        kv_pos = jnp.broadcast_to(jnp.arange(S_max, dtype=jnp.int32)[None],
+                                  (x.shape[0], S_max))
+        kv_pos = jnp.where(kv_pos < kv_valid[:, None], kv_pos, -1)
+        bias = _mask_bias(positions, kv_pos, window, prefix_len)
+        out = sdpa(q, newk, newv, bias, cfg.logit_softcap)
+    B, S, H, Dh = out.shape
+    y = nn.linear(out.reshape(B, S, H * Dh), p["wo"])
+    return (y, cache) if cache is not None else (y, None)
+
+
+def banded_sdpa(q, k, v, positions, window: int, softcap: float = 0.0):
+    """Block-banded local attention: O(S*w) memory/compute instead of the
+    naive O(S^2). Queries in blocks of `window` attend to their own block
+    and the previous one. Requires S % window == 0."""
+    B, S, H, Dh = q.shape
+    K = k.shape[2]
+    w = window
+    nb = S // w
+    qb = q.reshape(B, nb, w, H, Dh)
+    kb = k.reshape(B, nb, w, K, Dh)
+    vb = v.reshape(B, nb, w, K, Dh)
+    zeros = jnp.zeros_like(kb[:, :1])
+    k2 = jnp.concatenate([jnp.concatenate([zeros, kb[:, :-1]], 1), kb], 2)
+    v2 = jnp.concatenate([jnp.concatenate([zeros, vb[:, :-1]], 1), vb], 2)
+    posb = positions.reshape(B, nb, w)
+    negs = jnp.full_like(posb[:, :1], -1)
+    pos2 = jnp.concatenate(
+        [jnp.concatenate([negs, posb[:, :-1]], 1), posb], 2)  # [B,nb,2w]
+    G = H // K
+    qb = qb.reshape(B, nb, w, K, G, Dh)
+    scores = jnp.einsum("bnqkgd,bnskd->bnkgqs", qb, k2,
+                        preferred_element_type=jnp.float32)
+    scores = scores / np.sqrt(Dh)
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    ok = ((pos2[:, :, None, :] <= posb[:, :, :, None])
+          & (pos2[:, :, None, :] > posb[:, :, :, None] - w)
+          & (pos2[:, :, None, :] >= 0))              # [B,nb,w,2w]
+    bias = jnp.where(ok, 0.0, -jnp.inf)[:, :, None, None, :, :]
+    wgt = jax.nn.softmax(scores + bias, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bnkgqs,bnskd->bnqkgd", wgt, v2)
+    return out.reshape(B, S, H, Dh)
+
+
+def _sdpa_dispatch(cfg, q, k, v, bias, positions, window, prefix_len):
+    if cfg.use_pallas and prefix_len is None:
+        from repro.kernels.flash_attention import ops as flash_ops
+        return flash_ops.flash_attention(
+            q, k, v, causal=True, window=window,
+            softcap=cfg.logit_softcap)
+    if (window and prefix_len is None and q.shape[1] == k.shape[1]
+            and q.shape[1] % window == 0 and q.shape[1] >= 2 * window):
+        return banded_sdpa(q, k, v, positions, window, cfg.logit_softcap)
+    return sdpa(q, k, v, bias, cfg.logit_softcap)

@@ -1,0 +1,233 @@
+"""Language-model wrapper: embeddings, transformer stack, heads, losses,
+and the canonical train/prefill/decode entry points used by the launcher,
+dry-run, benchmarks and serving engine.
+
+Batch dict conventions
+----------------------
+training (`loss_fn` / `train step`):
+    tokens  [B, S]  or [B, K, S] (multi-codebook, musicgen)
+    labels  same shape, -100 = ignore
+    prefix_embeds [B, P, D] optional (paligemma patch embeddings, stub
+        frontend), prepended to the token embeddings; prefix positions are
+        bidirectional when cfg.prefix_lm.
+serving:
+    prefill(params, tokens, caches, ...) -> (logits_last, caches)
+    decode_step(params, token, pos, caches, ...) -> (logits, caches)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import modules as nn
+from repro.models import transformer
+from repro.parallel import sharding as shd
+
+IGNORE = -100
+
+
+def lm_init(key, cfg) -> Dict[str, Any]:
+    cfg.validate()
+    ks = jax.random.split(key, 4)
+    K = cfg.n_codebooks
+    V = cfg.vocab_padded
+    p: Dict[str, Any] = {
+        "embed": nn.truncated_normal(ks[0], (K, V, cfg.d_model), 0.02)
+        if K > 1 else nn.truncated_normal(ks[0], (V, cfg.d_model), 0.02),
+        "stack": transformer.stack_init(ks[1], cfg),
+        "final_norm": jnp.ones((cfg.d_model,)),
+    }
+    if not cfg.tie_embeddings:
+        shape = (K, cfg.d_model, V) if K > 1 else (cfg.d_model, V)
+        p["head"] = nn.truncated_normal(ks[2], shape, 0.02)
+    return p
+
+
+def _embed(p, cfg, tokens):
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.n_codebooks > 1:           # tokens [B, K, S]
+        embs = []
+        for k in range(cfg.n_codebooks):
+            embs.append(p["embed"][k].astype(dt)[tokens[:, k]])
+        x = sum(embs)
+    else:
+        x = p["embed"].astype(dt)[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.embed_scale, dt)
+    return x
+
+
+def _head(p, cfg, x):
+    if cfg.tie_embeddings:
+        if cfg.n_codebooks > 1:
+            w = p["embed"].astype(x.dtype)           # [K, V, D]
+            logits = jnp.einsum("bsd,kvd->bksv", x, w)
+        else:
+            logits = nn.linear(x, p["embed"].astype(x.dtype).T)
+    else:
+        w = p["head"].astype(x.dtype)
+        if cfg.n_codebooks > 1:
+            logits = jnp.einsum("bsd,kdv->bksv", x, w)
+        else:
+            logits = nn.linear(x, w)
+    if cfg.vocab_padded != cfg.vocab:   # mask padding rows
+        pad_mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+        logits = logits + jnp.where(pad_mask, -1e9, 0.0).astype(logits.dtype)
+    return logits
+
+
+def forward(p, cfg, tokens, prefix_embeds=None, positions=None,
+            caches=None, cache_pos=None, kv_valid=None,
+            head_mode: str = "all"):
+    """Full forward. head_mode: "all" | "last" (only the final position's
+    logits — prefill) | "none" (return final hidden states — chunked loss).
+    Returns (logits_or_hidden, new_caches, aux_loss)."""
+    x = _embed(p, cfg, tokens)
+    B = x.shape[0]
+    n_pre = 0
+    if prefix_embeds is not None:
+        pe = prefix_embeds.astype(x.dtype)
+        if cfg.embed_scale:
+            pe = pe * jnp.asarray(cfg.embed_scale, x.dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+        n_pre = prefix_embeds.shape[1]
+    S = x.shape[1]
+    if positions is None:
+        base = 0 if cache_pos is None else cache_pos
+        positions = base + jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    prefix_len = None
+    if cfg.prefix_lm and n_pre:
+        prefix_len = jnp.full((B,), n_pre, jnp.int32)
+    x = shd.constrain(x, ("batch", "seq", None))
+    x, new_caches, aux = transformer.stack_apply(
+        p["stack"], cfg, x, positions, prefix_len=prefix_len,
+        caches=caches, cache_pos=cache_pos, kv_valid=kv_valid)
+    x = nn.rms_norm(x, p["final_norm"], cfg.norm_eps)
+    if n_pre:
+        x = x[:, n_pre:]
+    if head_mode == "none":
+        return x, new_caches, aux
+    if head_mode == "last":
+        x = x[:, -1:]
+    logits = _head(p, cfg, x)
+    return logits, new_caches, aux
+
+
+def _ce_from_logits(cfg, logits, labels):
+    logits = logits.astype(jnp.float32)
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    mask = labels != IGNORE
+    safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    return ((logz - gold) * mask).sum(), mask.sum()
+
+
+def loss_fn(p, cfg, batch, loss_chunk: int = 1024
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Mean next-token cross entropy (+ MoE aux loss).
+
+    The head + CE run in sequence chunks so the full [B, S, V] fp32 logits
+    tensor is never materialized (vocab-sharded head stays sharded)."""
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    hidden, _, aux = forward(p, cfg, tokens,
+                             prefix_embeds=batch.get("prefix_embeds"),
+                             head_mode="none")
+    S = hidden.shape[1]
+    if loss_chunk and S > loss_chunk and S % loss_chunk == 0:
+        nc = S // loss_chunk
+        # [B, S, D] -> [nc, B, c, D]; labels [..., S] -> [nc, ..., c]
+        hs = jnp.moveaxis(
+            hidden.reshape(hidden.shape[0], nc, loss_chunk, -1), 1, 0)
+        lab = jnp.moveaxis(
+            labels.reshape(*labels.shape[:-1], nc, loss_chunk), -2, 0)
+
+        def chunk_ce(carry, xs):
+            h, l = xs
+            logits = _head(p, cfg, h)
+            nll, n = _ce_from_logits(cfg, logits, l)
+            return (carry[0] + nll, carry[1] + n), None
+
+        (nll_sum, n_sum), _ = jax.lax.scan(
+            chunk_ce, (jnp.float32(0.0), jnp.int32(0)), (hs, lab))
+    else:
+        logits = _head(p, cfg, hidden)
+        nll_sum, n_sum = _ce_from_logits(cfg, logits, labels)
+    denom = jnp.maximum(n_sum, 1)
+    ce = nll_sum / denom
+    total = ce + aux
+    return total, {"loss": total, "ce": ce, "aux": aux,
+                   "ntok": denom.astype(jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# serving entry points
+# ---------------------------------------------------------------------------
+def init_caches(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return transformer.stack_cache_init(cfg, batch, max_len, dtype)
+
+
+def prefill(p, cfg, tokens, caches, prefix_embeds=None, kv_valid=None):
+    """Prefill from position 0. Returns (last_logits, caches)."""
+    logits, caches, _ = forward(p, cfg, tokens, prefix_embeds=prefix_embeds,
+                                caches=caches, cache_pos=0,
+                                kv_valid=kv_valid, head_mode="last")
+    return logits[:, 0] if cfg.n_codebooks == 1 else logits[:, :, 0], caches
+
+
+def decode_step(p, cfg, token, pos: int | jax.Array, caches, kv_valid=None,
+                positions=None):
+    """One decode step. token [B] (or [B, K]); pos scalar cache offset."""
+    if cfg.n_codebooks > 1:
+        tok = token[:, :, None]              # [B, K, 1]
+    else:
+        tok = token[:, None]                 # [B, 1]
+    logits, caches, _ = forward(p, cfg, tok, caches=caches, cache_pos=pos,
+                                kv_valid=kv_valid, positions=positions)
+    out = logits[:, 0] if cfg.n_codebooks == 1 else logits[:, :, 0]
+    return out, caches
+
+
+def param_count(p) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(p)))
+
+
+def model_flops_per_token(cfg, n_params: Optional[int] = None,
+                          params=None) -> float:
+    """6*N per token for training (fwd+bwd); N = active params."""
+    n = n_params if n_params is not None else active_param_count(cfg, params)
+    return 6.0 * n
+
+
+def active_param_count(cfg, params=None) -> int:
+    """Active (per-token) parameter count: embeddings + non-expert weights +
+    top_k/E of expert weights + shared experts."""
+    if params is None:
+        raise ValueError("need params")
+    total = param_count(params)
+    if cfg.mlp_type != "moe":
+        return total
+    # subtract inactive expert fraction
+    def expert_size(tree):
+        s = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+            keys = [str(getattr(k, "key", getattr(k, "name", "")))
+                    for k in path]
+            is_expert = (
+                any(k in ("w_gate", "w_up", "w_down") for k in keys)
+                and "mlp" in keys and "shared" not in keys
+                and leaf.ndim >= 3
+                and cfg.moe.n_experts in leaf.shape[:-2]
+            )
+            if is_expert:
+                s += int(np.prod(leaf.shape))
+        return s
+    e_total = expert_size(params)
+    frac = cfg.moe.top_k / cfg.moe.n_experts
+    return int(total - e_total * (1.0 - frac))

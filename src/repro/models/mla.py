@@ -1,0 +1,154 @@
+"""Multi-head latent attention (DeepSeek-V2 / MiniCPM3).
+
+Q path: optional low-rank (q_lora) projection; per-head dims split into a
+non-positional part (qk_nope) and a RoPE part (qk_rope).
+KV path: a shared low-rank latent c_kv (kv_lora) is up-projected to K_nope
+and V; a single shared RoPE key k_rope comes straight from x.
+
+The decode cache stores only (c_kv, k_rope) — the paper's compressed cache —
+and up-projects per step. (The weight-absorbed decode variant is a perf
+iteration, see EXPERIMENTS.md §Perf.)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import modules as nn
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array      # [B, S_max, R]   compressed latent
+    k_rope: jax.Array    # [B, S_max, Dr]  shared rope key
+
+    @staticmethod
+    def init(batch, max_len, kv_lora, d_rope, dtype=jnp.bfloat16):
+        return MLACache(
+            jnp.zeros((batch, max_len, kv_lora), dtype),
+            jnp.zeros((batch, max_len, d_rope), dtype),
+        )
+
+
+def mla_init(key, cfg):
+    m = cfg.mla
+    d = cfg.d_model
+    h = cfg.n_heads
+    dq = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 8)
+    p = {}
+    if m.q_lora_rank:
+        p["w_dq"] = nn.dense_init(ks[0], d, m.q_lora_rank)
+        p["q_norm"] = jnp.ones((m.q_lora_rank,))
+        p["w_uq"] = nn.dense_init(ks[1], m.q_lora_rank, (h, dq))
+    else:
+        p["w_q"] = nn.dense_init(ks[1], d, (h, dq))
+    p["w_dkv"] = nn.dense_init(ks[2], d, m.kv_lora_rank)
+    p["kv_norm"] = jnp.ones((m.kv_lora_rank,))
+    p["w_uk"] = nn.dense_init(ks[3], m.kv_lora_rank, (h, m.qk_nope_head_dim))
+    p["w_uv"] = nn.dense_init(ks[4], m.kv_lora_rank, (h, m.v_head_dim))
+    p["w_kr"] = nn.dense_init(ks[5], d, m.qk_rope_head_dim)
+    p["wo"] = nn.dense_init(ks[6], h * m.v_head_dim, d)
+    return p
+
+
+def _mla_q(p, cfg, x, positions):
+    m = cfg.mla
+    if m.q_lora_rank:
+        cq = nn.rms_norm(nn.linear(x, p["w_dq"]), p["q_norm"], cfg.norm_eps)
+        q = nn.linear(cq, p["w_uq"])
+    else:
+        q = nn.linear(x, p["w_q"])                          # [B,S,H,dq]
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = nn.apply_rope(q[..., m.qk_nope_head_dim:], positions,
+                           cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latents(p, cfg, x, positions):
+    c_kv = nn.linear(x, p["w_dkv"])                         # [B,S,R]
+    k_rope = nn.apply_rope(
+        nn.linear(x, p["w_kr"])[:, :, None, :], positions, cfg.rope_theta
+    )[:, :, 0, :]                                           # [B,S,Dr]
+    return c_kv, k_rope
+
+
+def _mla_attend(p, cfg, q_nope, q_rope, c_kv, k_rope, q_pos, kv_pos,
+                softcap: float = 0.0):
+    """Attention over (possibly cached) latents."""
+    m = cfg.mla
+    ckn = nn.rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_nope = nn.linear(ckn, p["w_uk"])                      # [B,Skv,H,dn]
+    v = nn.linear(ckn, p["w_uv"])                           # [B,Skv,H,dv]
+    # NOTE §Perf iteration 6a: forcing these head-sharded ("model") was
+    # REFUTED — the latents are seq-sharded, so the constraint added a
+    # resharding step (collective 1.58s -> 2.23s). Left unconstrained.
+    scale = 1.0 / np.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    s_nope = jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope,
+                        preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bqhd,bkd->bhqk", q_rope, k_rope,
+                        preferred_element_type=jnp.float32)
+    scores = (s_nope + s_rope) * scale
+    ok = (kv_pos[:, None, :] <= q_pos[:, :, None]) & (kv_pos[:, None, :] >= 0)
+    scores = scores + jnp.where(ok, 0.0, -jnp.inf)[:, None, :, :]
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, v)
+    B, S, H, Dv = out.shape
+    return nn.linear(out.reshape(B, S, H * Dv), p["wo"])
+
+
+def _mla_attend_absorbed(p, cfg, q_nope, q_rope, c_kv, k_rope, q_pos,
+                         kv_pos):
+    """Weight-absorbed attention in the compressed latent space (the
+    DeepSeek-V2 deployment trick, §Perf): instead of up-projecting the
+    whole cache to K/V per step, fold W_uk into the query and W_uv into
+    the output:
+        score = (W_uk^T q_nope)^T c_kv + q_rope^T k_rope
+        out   = W_uv^T (softmax(score) c_kv)
+    Per-step FLOPs drop from O(S*R*H*(dn+dv)) to O(H*R*(dn+dv) + S*H*R),
+    and cache traffic is one read of (c_kv, k_rope)."""
+    m = cfg.mla
+    ckn = nn.rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)      # [B,Skv,R]
+    # q~ [B,Sq,H,R]: absorb W_uk [R,H,dn] into the query
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope,
+                       p["w_uk"].astype(q_nope.dtype))
+    scale = 1.0 / np.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    s_nope = jnp.einsum("bqhr,bkr->bhqk", q_lat, ckn,
+                        preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bqhd,bkd->bhqk", q_rope, k_rope,
+                        preferred_element_type=jnp.float32)
+    scores = (s_nope + s_rope) * scale
+    ok = (kv_pos[:, None, :] <= q_pos[:, :, None]) & (kv_pos[:, None, :] >= 0)
+    scores = scores + jnp.where(ok, 0.0, -jnp.inf)[:, None, :, :]
+    w = jax.nn.softmax(scores, axis=-1).astype(c_kv.dtype)
+    o_lat = jnp.einsum("bhqk,bkr->bqhr", w, ckn)             # [B,Sq,H,R]
+    out = jnp.einsum("bqhr,rhd->bqhd", o_lat,
+                     p["w_uv"].astype(o_lat.dtype))
+    B, S, H, Dv = out.shape
+    return nn.linear(out.reshape(B, S, H * Dv), p["wo"])
+
+
+def mla_apply(p, cfg, x, positions, cache: Optional[MLACache] = None,
+              cache_pos=None, kv_valid=None):
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    c_kv, k_rope = _mla_latents(p, cfg, x, positions)
+    if cache is None:
+        return _mla_attend(p, cfg, q_nope, q_rope, c_kv, k_rope,
+                           positions, positions), None
+    S = x.shape[1]
+    S_max = cache.c_kv.shape[1]
+    newc = jax.lax.dynamic_update_slice_in_dim(
+        cache.c_kv, c_kv.astype(cache.c_kv.dtype), cache_pos, axis=1)
+    newr = jax.lax.dynamic_update_slice_in_dim(
+        cache.k_rope, k_rope.astype(cache.k_rope.dtype), cache_pos, axis=1)
+    cache = MLACache(newc, newr)
+    if kv_valid is None:
+        kv_valid = jnp.full((x.shape[0],), 0, jnp.int32) + cache_pos + S
+    kv_pos = jnp.broadcast_to(jnp.arange(S_max, dtype=jnp.int32)[None],
+                              (x.shape[0], S_max))
+    kv_pos = jnp.where(kv_pos < kv_valid[:, None], kv_pos, -1)
+    attend = _mla_attend_absorbed if cfg.mla_absorb else _mla_attend
+    y = attend(p, cfg, q_nope, q_rope, newc, newr, positions, kv_pos)
+    return y, cache

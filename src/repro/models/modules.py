@@ -1,0 +1,154 @@
+"""Primitive layers: pure init/apply functions over pytree params.
+
+Conventions:
+  * params are nested dicts of jnp arrays, fp32 at rest (`param_dtype`),
+    cast to the compute dtype inside `apply`.
+  * every init takes a `jax.random.PRNGKey` and returns a dict.
+  * shapes use named comments: B batch, S seq, D d_model, H heads, K kv
+    heads, Dh head dim, F d_ff, V vocab, E experts.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def truncated_normal(key, shape, std, dtype=jnp.float32):
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def dense_init(key, d_in: int, d_out, std: Optional[float] = None,
+               dtype=jnp.float32):
+    """Weight of shape (d_in, *d_out) with fan-in scaled init."""
+    if isinstance(d_out, int):
+        d_out = (d_out,)
+    std = std if std is not None else 1.0 / np.sqrt(d_in)
+    return truncated_normal(key, (d_in, *d_out), std, dtype)
+
+
+def linear(x, w, b=None):
+    """x [..., d_in] @ w [d_in, *rest] -> [..., *rest]."""
+    out_axes = w.ndim - 1
+    y = jax.lax.dot_general(
+        x, w.astype(x.dtype),
+        (((x.ndim - 1,), (0,)), ((), ())),
+    )
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+def rms_norm(x, scale, eps: float = 1e-6, zero_centered: bool = False):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    s = scale.astype(jnp.float32)
+    if zero_centered:
+        s = s + 1.0
+    return (y * s).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(d_rot: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_rot, 2, dtype=jnp.float32)
+                            / d_rot))
+
+
+def apply_rope(x, positions, theta: float = 10000.0,
+               rotary_pct: float = 1.0):
+    """x [B, S, H, Dh]; positions [B, S] (int). Rotates the leading
+    `rotary_pct` fraction of Dh, half-split convention."""
+    d = x.shape[-1]
+    d_rot = int(d * rotary_pct) // 2 * 2
+    if d_rot == 0:
+        return x
+    xr, xp = x[..., :d_rot], x[..., d_rot:]
+    freqs = rope_freqs(d_rot, theta)                       # [d_rot/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, d_rot/2]
+    cos = jnp.cos(ang)[..., None, :]                        # [B, S, 1, ...]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(xr.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def mlp_init(key, d_model: int, d_ff: int, kind: str):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(k1, d_model, d_ff),
+            "w_up": dense_init(k2, d_model, d_ff),
+            "w_down": dense_init(k3, d_ff, d_model),
+        }
+    if kind == "gelu":
+        return {
+            "w_up": dense_init(k1, d_model, d_ff),
+            "b_up": jnp.zeros((d_ff,)),
+            "w_down": dense_init(k2, d_ff, d_model),
+            "b_down": jnp.zeros((d_model,)),
+        }
+    raise ValueError(kind)
+
+
+def mlp_apply(p, x, kind: str):
+    if kind == "swiglu":
+        return linear(jax.nn.silu(linear(x, p["w_gate"]))
+                      * linear(x, p["w_up"]), p["w_down"])
+    if kind == "geglu":
+        return linear(jax.nn.gelu(linear(x, p["w_gate"]), approximate=True)
+                      * linear(x, p["w_up"]), p["w_down"])
+    if kind == "gelu":
+        h = jax.nn.gelu(linear(x, p["w_up"], p["b_up"]), approximate=True)
+        return linear(h, p["w_down"], p["b_down"])
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d (mamba / griffin style, cached for decode)
+# ---------------------------------------------------------------------------
+def conv1d_init(key, width: int, channels: int):
+    return {
+        "w": truncated_normal(key, (width, channels), 1.0 / np.sqrt(width)),
+        "b": jnp.zeros((channels,)),
+    }
+
+
+def conv1d_apply(p, x):
+    """Causal depthwise conv. x [B, S, C] -> [B, S, C]."""
+    w = p["w"].astype(x.dtype)                    # [W, C]
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):                        # small fixed width: unroll
+        out = out + pad[:, i:i + x.shape[1], :] * w[i]
+    return out + p["b"].astype(x.dtype)
+
+
+def conv1d_step(p, x_t, window):
+    """Single decode step. x_t [B, C]; window [B, W-1, C] (trailing inputs).
+    Returns (y_t [B, C], new_window)."""
+    w = p["w"].astype(x_t.dtype)
+    width = w.shape[0]
+    full = jnp.concatenate([window, x_t[:, None, :]], axis=1)  # [B, W, C]
+    y = jnp.einsum("bwc,wc->bc", full, w) + p["b"].astype(x_t.dtype)
+    return y, full[:, -(width - 1):, :] if width > 1 else window

@@ -1,0 +1,113 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+y = W_out( RG_LRU(conv1d(W_x x)) * gelu(W_gate x) )
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(w_r x_t + b_r)          recurrence gate
+    i_t = sigmoid(w_i x_t + b_i)          input gate
+    a_t = exp(-c * softplus(L) * r_t)     log-space decay, L learnable
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill uses an associative scan over the sequence; decode carries
+h (and the conv window) in `RGLRUState`.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import modules as nn
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array         # [B, R] recurrent state
+    conv: jax.Array      # [B, W-1, R] conv window
+
+    @staticmethod
+    def init(batch, d_rnn, conv_width, dtype=jnp.float32):
+        return RGLRUState(
+            jnp.zeros((batch, d_rnn), dtype),
+            jnp.zeros((batch, conv_width - 1, d_rnn), dtype),
+        )
+
+
+def rglru_init(key, cfg):
+    rc = cfg.rglru
+    d = cfg.d_model
+    r = rc.d_rnn or d
+    ks = jax.random.split(key, 7)
+    # Lambda init so that a ~ U(0.9, 0.999)^c-ish (Griffin appendix)
+    u = jax.random.uniform(ks[0], (r,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / rc.c))  # softplus^-1(-ln u / c)
+    return {
+        "w_x": nn.dense_init(ks[1], d, r),
+        "w_gate": nn.dense_init(ks[2], d, r),
+        "conv": nn.conv1d_init(ks[3], rc.conv_width, r),
+        "w_r": nn.dense_init(ks[4], r, r, std=1.0 / np.sqrt(r)),
+        "b_r": jnp.zeros((r,)),
+        "w_i": nn.dense_init(ks[5], r, r, std=1.0 / np.sqrt(r)),
+        "b_i": jnp.zeros((r,)),
+        "lam": lam,
+        "w_out": nn.dense_init(ks[6], r, d),
+    }
+
+
+def _gates(p, cfg, u):
+    """u [B,S,R] (post-conv) -> (a, bx) with h_t = a h_{t-1} + bx."""
+    rc = cfg.rglru
+    r = jax.nn.sigmoid(nn.linear(u, p["w_r"], p["b_r"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(nn.linear(u, p["w_i"], p["b_i"]).astype(jnp.float32))
+    log_a = -rc.c * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    bx = beta * (i * u.astype(jnp.float32))
+    return a, bx
+
+
+def _scan(a, bx, h0=None):
+    """Linear recurrence via associative scan along axis 1 (fp32)."""
+    if h0 is not None:
+        # fold the carry into the first step
+        bx = bx.at[:, 0].add(a[:, 0] * h0)
+    def comb(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(comb, (a, bx), axis=1)
+    return h
+
+
+def rglru_apply(p, cfg, x, state: Optional[RGLRUState] = None):
+    """x [B,S,D] -> (y [B,S,D], new_state)."""
+    rc = cfg.rglru
+    gate = jax.nn.gelu(nn.linear(x, p["w_gate"]), approximate=True)
+    u = nn.linear(x, p["w_x"])
+    if state is None:
+        u = nn.conv1d_apply(p["conv"], u)
+        a, bx = _gates(p, cfg, u)
+        if cfg.use_pallas:
+            from repro.kernels.rg_lru import ops as rg_ops
+            h = rg_ops.rg_lru_scan(a, bx)
+        else:
+            h = _scan(a, bx)
+        new_state = None
+    else:
+        if x.shape[1] == 1:
+            ut, conv_w = nn.conv1d_step(p["conv"], u[:, 0], state.conv)
+            a, bx = _gates(p, cfg, ut[:, None, :])
+            h = a * state.h[:, None, :].astype(jnp.float32) + bx
+            new_state = RGLRUState(h[:, -1].astype(state.h.dtype), conv_w)
+        else:  # chunked prefill with carry
+            full = jnp.concatenate(
+                [state.conv.astype(u.dtype), u], axis=1)
+            u = nn.conv1d_apply(p["conv"], full)[:, state.conv.shape[1]:]
+            a, bx = _gates(p, cfg, u)
+            h = _scan(a, bx, h0=state.h.astype(jnp.float32))
+            new_state = RGLRUState(
+                h[:, -1].astype(state.h.dtype),
+                full[:, -(rc.conv_width - 1):, :].astype(state.conv.dtype))
+    y = nn.linear(h.astype(x.dtype) * gate, p["w_out"])
+    return y, new_state

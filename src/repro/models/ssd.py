@@ -1,0 +1,236 @@
+"""Mamba-2 SSD (state-space duality) block.
+
+Block: in_proj -> (z, x, B, C, dt); causal conv1d on (x, B, C); SSD scan
+with scalar-per-head decay A; gated RMSNorm on z; out_proj.
+
+SSD chunked algorithm (Dao & Gu 2024, sec. 6): split the sequence into
+chunks of length Q. Within a chunk the output is a masked (C B^T) attention
+("duality"); across chunks a small [H, N, P] state is carried by a scan.
+
+Decode carries (conv windows, ssd state) in `SSDState`.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import modules as nn
+
+
+class SSDState(NamedTuple):
+    h: jax.Array          # [B, H, N, P] ssd state
+    conv_x: jax.Array     # [B, W-1, H*P]
+    conv_B: jax.Array     # [B, W-1, G*N]
+    conv_C: jax.Array     # [B, W-1, G*N]
+
+    @staticmethod
+    def init(batch, n_heads, d_state, head_dim, conv_width, n_groups,
+             dtype=jnp.float32):
+        w = conv_width - 1
+        return SSDState(
+            jnp.zeros((batch, n_heads, d_state, head_dim), dtype),
+            jnp.zeros((batch, w, n_heads * head_dim), dtype),
+            jnp.zeros((batch, w, n_groups * d_state), dtype),
+            jnp.zeros((batch, w, n_groups * d_state), dtype),
+        )
+
+
+def ssd_dims(cfg):
+    sc = cfg.ssd
+    d_inner = sc.expand * cfg.d_model
+    n_heads = d_inner // sc.head_dim
+    return d_inner, n_heads
+
+
+def ssd_init(key, cfg):
+    sc = cfg.ssd
+    d = cfg.d_model
+    d_inner, n_heads = ssd_dims(cfg)
+    gn = sc.n_groups * sc.d_state
+    ks = jax.random.split(key, 6)
+    return {
+        # fused input projection -> [z, x, B, C, dt]
+        "w_in": nn.dense_init(ks[0], d, 2 * d_inner + 2 * gn + n_heads),
+        "conv_x": nn.conv1d_init(ks[1], sc.conv_width, d_inner),
+        "conv_B": nn.conv1d_init(ks[2], sc.conv_width, gn),
+        "conv_C": nn.conv1d_init(ks[3], sc.conv_width, gn),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)),
+        "D": jnp.ones((n_heads,)),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[4], (n_heads,),
+                                       minval=np.log(1e-3),
+                                       maxval=np.log(1e-1))))),
+        "norm": jnp.ones((d_inner,)),
+        "w_out": nn.dense_init(ks[5], d_inner, d),
+    }
+
+
+def _split_in(cfg, proj):
+    sc = cfg.ssd
+    d_inner, n_heads = ssd_dims(cfg)
+    gn = sc.n_groups * sc.d_state
+    z, xs, Bm, Cm, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + gn, 2 * d_inner + 2 * gn],
+        axis=-1)
+    return z, xs, Bm, Cm, dt
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    x  [B, S, H, P]   inputs (head_dim P)
+    dt [B, S, H]      positive step sizes
+    A  [H]            negative decay rates (A < 0)
+    Bm [B, S, G, N], Cm [B, S, G, N] with H % G == 0
+    h0 [B, H, N, P]   optional initial state
+    Returns (y [B, S, H, P], h_last [B, H, N, P]).
+    """
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    rep = H // G
+
+    xb = x.reshape(Bsz, nc, chunk, H, P)
+    dtb = dt.reshape(Bsz, nc, chunk, H).astype(jnp.float32)
+    Bb = Bm.reshape(Bsz, nc, chunk, G, N)
+    Cb = Cm.reshape(Bsz, nc, chunk, G, N)
+    # expand groups to heads
+    Bb = jnp.repeat(Bb, rep, axis=3)                    # [B,nc,Q,H,N]
+    Cb = jnp.repeat(Cb, rep, axis=3)
+
+    dA = dtb * A.astype(jnp.float32)                    # [B,nc,Q,H] (<0)
+    cum = jnp.cumsum(dA, axis=2)                        # within-chunk cumsum
+    # seg[b,c,i,j,h] = sum_{t=j+1..i} dA = cum_i - cum_j
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,nc,Q(i),Q(j),H]
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool), 0)[None, None, :, :,
+                                                         None]
+    L = jnp.where(causal, jnp.exp(seg), 0.0)
+
+    xdt = xb * dtb[..., None]                           # weight inputs by dt
+    # intra-chunk (dual / attention-like) term
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Cb, Bb).astype(jnp.float32)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores * L,
+                         xdt.astype(jnp.float32))
+
+    # chunk-final states: sum_j exp(cum_Q - cum_j) B_j x_j
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)     # [B,nc,Q,H]
+    states = jnp.einsum("bcjhn,bcjh,bcjhp->bchnp", Bb,
+                        decay_to_end, xdt.astype(jnp.float32))
+
+    # scan chunk states: h_c = exp(sum dA_c) h_{c-1} + states_c
+    chunk_decay = jnp.exp(cum[:, :, -1, :])             # [B,nc,H]
+
+    def comb(c1, c2):
+        a1, s1 = c1
+        a2, s2 = c2
+        return a1 * a2, a2[..., None, None] * s1 + s2
+
+    a_all, h_all = jax.lax.associative_scan(
+        comb, (chunk_decay, states), axis=1)            # h after each chunk
+    if h0 is not None:
+        h0f = h0.astype(jnp.float32)
+        h_all = h_all + a_all[..., None, None] * h0f[:, None]
+    # state entering chunk c
+    h_prev = jnp.concatenate(
+        [jnp.zeros_like(h_all[:, :1]) if h0 is None
+         else h0.astype(jnp.float32)[:, None],
+         h_all[:, :-1]], axis=1)                        # [B,nc,H,N,P]
+
+    # inter-chunk contribution: C_i exp(cum_i) h_prev
+    in_decay = jnp.exp(cum)                             # [B,nc,Q,H]
+    y_inter = jnp.einsum("bcihn,bcih,bchnp->bcihp", Cb, in_decay, h_prev)
+
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y.astype(x.dtype), h_all[:, -1]
+
+
+def ssd_step(x_t, dt_t, A, B_t, C_t, h):
+    """Single decode step. x_t [B,H,P], dt_t [B,H], B_t/C_t [B,G,N],
+    h [B,H,N,P] -> (y [B,H,P], h')."""
+    G = B_t.shape[1]
+    H = x_t.shape[1]
+    rep = H // G
+    Bh = jnp.repeat(B_t, rep, axis=1)                   # [B,H,N]
+    Ch = jnp.repeat(C_t, rep, axis=1)
+    dtf = dt_t.astype(jnp.float32)
+    a = jnp.exp(dtf * A.astype(jnp.float32))            # [B,H]
+    upd = jnp.einsum("bhn,bhp->bhnp", Bh,
+                     (x_t * dt_t[..., None]).astype(jnp.float32))
+    h = a[..., None, None] * h.astype(jnp.float32) + upd
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, h)
+    return y.astype(x_t.dtype), h
+
+
+def ssd_apply(p, cfg, x, state: Optional[SSDState] = None):
+    """x [B,S,D] -> (y [B,S,D], new_state)."""
+    sc = cfg.ssd
+    d_inner, n_heads = ssd_dims(cfg)
+    proj = nn.linear(x, p["w_in"])
+    z, xs, Bm, Cm, dt = _split_in(cfg, proj)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    B_, S, _ = x.shape
+    if state is None or S > 1:
+        if state is None:
+            xs_c = nn.conv1d_apply(p["conv_x"], xs)
+            Bc = nn.conv1d_apply(p["conv_B"], Bm)
+            Cc = nn.conv1d_apply(p["conv_C"], Cm)
+            h0 = None
+        else:  # chunked prefill continuation
+            def warm(pc, seq, win):
+                full = jnp.concatenate([win.astype(seq.dtype), seq], 1)
+                return (nn.conv1d_apply(pc, full)[:, win.shape[1]:],
+                        full[:, -(sc.conv_width - 1):, :])
+            xs_c, wx = warm(p["conv_x"], xs, state.conv_x)
+            Bc, wb = warm(p["conv_B"], Bm, state.conv_B)
+            Cc, wc = warm(p["conv_C"], Cm, state.conv_C)
+            h0 = state.h
+        xs_c = jax.nn.silu(xs_c)
+        Bc = jax.nn.silu(Bc)
+        Cc = jax.nn.silu(Cc)
+        xh = xs_c.reshape(B_, S, n_heads, sc.head_dim)
+        Bh = Bc.reshape(B_, S, sc.n_groups, sc.d_state)
+        Ch = Cc.reshape(B_, S, sc.n_groups, sc.d_state)
+        dth = dt.reshape(B_, S, n_heads)
+        qc = min(sc.chunk, S)
+        while S % qc:                                   # static shapes
+            qc //= 2
+        if cfg.use_pallas and state is None:
+            from repro.kernels.ssd_scan import ops as ssd_ops
+            y, h_last = ssd_ops.ssd(xh, dth, A, Bh, Ch, chunk=qc)
+        else:
+            y, h_last = ssd_chunked(xh, dth, A, Bh, Ch, chunk=qc, h0=h0)
+        y = y + xh * p["D"].astype(y.dtype)[None, None, :, None]
+        y = y.reshape(B_, S, d_inner)
+        new_state = None
+        if state is not None:
+            new_state = SSDState(h_last, wx.astype(state.conv_x.dtype),
+                                 wb.astype(state.conv_B.dtype),
+                                 wc.astype(state.conv_C.dtype))
+    else:  # single-token decode
+        xt, wx = nn.conv1d_step(p["conv_x"], xs[:, 0], state.conv_x)
+        Bt, wb = nn.conv1d_step(p["conv_B"], Bm[:, 0], state.conv_B)
+        Ct, wc = nn.conv1d_step(p["conv_C"], Cm[:, 0], state.conv_C)
+        xt = jax.nn.silu(xt)
+        Bt = jax.nn.silu(Bt)
+        Ct = jax.nn.silu(Ct)
+        xh = xt.reshape(B_, n_heads, sc.head_dim)
+        y, h = ssd_step(
+            xh, dt.reshape(B_, 1, n_heads)[:, 0], A,
+            Bt.reshape(B_, sc.n_groups, sc.d_state),
+            Ct.reshape(B_, sc.n_groups, sc.d_state), state.h)
+        y = y + xh * p["D"].astype(y.dtype)[None, :, None]
+        y = y.reshape(B_, 1, d_inner)
+        new_state = SSDState(h, wx.astype(state.conv_x.dtype),
+                             wb.astype(state.conv_B.dtype),
+                             wc.astype(state.conv_C.dtype))
+
+    y = nn.rms_norm(y * jax.nn.silu(z[:, :y.shape[1]]), p["norm"],
+                    cfg.norm_eps)
+    return nn.linear(y, p["w_out"]), new_state

@@ -1,0 +1,212 @@
+"""Block assembly: pre-norm residual blocks, scan-over-layer-groups with
+rematerialization, heterogeneous block patterns.
+
+The layer pattern (cfg.pattern) repeats with period P; parameters are stored
+as a list of `P` stacked pytrees (leading axis = number of repetitions), so
+`jax.lax.scan` runs over repetition groups while each group applies its P
+heterogeneous blocks. Leading non-repeating layers (e.g. DeepSeek's dense
+layer 0) live in `prologue`.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, mla, moe, rglru, ssd
+from repro.models import modules as nn
+from repro.parallel import sharding as shd
+
+
+# -------------------------- per-block init/apply ---------------------------
+def block_init(key, cfg, kind: str, layer_idx: int):
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": jnp.ones((cfg.d_model,))}
+    if kind in ("attn", "local"):
+        if cfg.attn_impl == "mla" and kind == "attn":
+            p["attn"] = mla.mla_init(ks[0], cfg)
+        else:
+            p["attn"] = attention.attn_init(ks[0], cfg)
+    elif kind == "rglru":
+        p["attn"] = rglru.rglru_init(ks[0], cfg)
+    elif kind == "ssd":
+        p["attn"] = ssd.ssd_init(ks[0], cfg)
+        return p                       # SSD block has no separate MLP
+    else:
+        raise ValueError(kind)
+    p["ln2"] = jnp.ones((cfg.d_model,))
+    if cfg.mlp_type == "moe" and layer_idx >= cfg.moe.first_k_dense:
+        p["mlp"] = moe.moe_init(ks[1], cfg)   # has "router" => MoE block
+    elif cfg.mlp_type != "none":
+        kind_mlp = "swiglu" if cfg.mlp_type == "moe" else cfg.mlp_type
+        d_ff = cfg.d_ff
+        p["mlp"] = nn.mlp_init(ks[1], cfg.d_model, d_ff, kind_mlp)
+    return p
+
+
+def block_apply(p, cfg, kind: str, x, positions, prefix_len=None,
+                cache=None, cache_pos=None, kv_valid=None):
+    """One residual block. Returns (x, new_cache, aux_loss)."""
+    aux = jnp.float32(0.0)
+    h = nn.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind == "attn" and cfg.attn_impl == "mla":
+        y, new_cache = mla.mla_apply(p["attn"], cfg, h, positions,
+                                     cache=cache, cache_pos=cache_pos,
+                                     kv_valid=kv_valid)
+    elif kind in ("attn", "local"):
+        window = cfg.window if kind == "local" else 0
+        y, new_cache = attention.attn_apply(
+            p["attn"], cfg, h, positions, prefix_len=prefix_len,
+            window=window, cache=cache, cache_pos=cache_pos,
+            kv_valid=kv_valid)
+    elif kind == "rglru":
+        y, new_cache = rglru.rglru_apply(p["attn"], cfg, h, state=cache)
+    elif kind == "ssd":
+        y, new_cache = ssd.ssd_apply(p["attn"], cfg, h, state=cache)
+        return (shd.constrain(x + y.astype(x.dtype),
+                              ("batch", "seq", None)), new_cache, aux)
+    else:
+        raise ValueError(kind)
+    x = shd.constrain(x + y.astype(x.dtype), ("batch", "seq", None))
+    if "mlp" in p:
+        h2 = nn.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if "router" in p["mlp"]:
+            y2, aux = moe.moe_apply(p["mlp"], cfg, h2)
+        else:
+            kind_mlp = "swiglu" if cfg.mlp_type == "moe" else cfg.mlp_type
+            y2 = nn.mlp_apply(p["mlp"], h2, kind_mlp)
+        x = shd.constrain(x + y2.astype(x.dtype), ("batch", "seq", None))
+    return x, new_cache, aux
+
+
+# ----------------------------- stack init ----------------------------------
+def stack_layout(cfg) -> Tuple[List[str], List[str], int]:
+    """Returns (prologue_kinds, period_kinds, n_groups)."""
+    pat = list(cfg.pattern_full)
+    n_pro = cfg.moe.first_k_dense if (cfg.mlp_type == "moe"
+                                      and cfg.moe is not None) else 0
+    period = len(cfg.pattern)
+    body = pat[n_pro:]
+    n_groups = len(body) // period
+    rem = len(body) - n_groups * period
+    # any ragged tail joins the prologue (kept unscanned)
+    prologue = pat[:n_pro] + (body[n_groups * period:] if rem else [])
+    return prologue, list(cfg.pattern), n_groups
+
+
+def stack_init(key, cfg):
+    prologue, period, n_groups = stack_layout(cfg)
+    keys = jax.random.split(key, len(prologue) + n_groups * len(period) + 1)
+    ki = 0
+    pro_params = []
+    for i, kind in enumerate(prologue):
+        pro_params.append(block_init(keys[ki], cfg, kind, layer_idx=i))
+        ki += 1
+    base = len(prologue)
+    groups = []
+    for slot, kind in enumerate(period):
+        reps = []
+        for g in range(n_groups):
+            layer_idx = base + g * len(period) + slot
+            reps.append(block_init(keys[ki], cfg, kind, layer_idx=layer_idx))
+            ki += 1
+        groups.append(jax.tree.map(lambda *a: jnp.stack(a), *reps)
+                      if n_groups > 0 else None)
+    return {"prologue": pro_params, "groups": groups}
+
+
+# ----------------------------- stack apply ---------------------------------
+def _remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    policy = None
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+    return jax.checkpoint(fn, policy=policy)
+
+
+def stack_apply(params, cfg, x, positions, prefix_len=None,
+                caches=None, cache_pos=None, kv_valid=None):
+    """Apply all blocks. `caches` is None (training) or a dict:
+       {"prologue": [cache,...], "groups": [stacked cache,...]}.
+    Returns (x, new_caches, total_aux)."""
+    prologue, period, n_groups = stack_layout(cfg)
+    aux_total = jnp.float32(0.0)
+    new_caches: Dict[str, Any] = {"prologue": [], "groups": []}
+
+    for i, kind in enumerate(prologue):
+        c = caches["prologue"][i] if caches is not None else None
+        fn = _remat(cfg, lambda p, xx, cc, kind=kind: block_apply(
+            p, cfg, kind, xx, positions, prefix_len, cc, cache_pos,
+            kv_valid))
+        x, nc, aux = fn(params["prologue"][i], x, c)
+        new_caches["prologue"].append(nc)
+        aux_total = aux_total + aux
+
+    if n_groups > 0:
+        def group_body(carry, scanned):
+            xx, aux_acc = carry
+            gparams, gcaches = scanned
+            ncs = []
+            for slot, kind in enumerate(period):
+                c = gcaches[slot] if gcaches is not None else None
+                fn = _remat(cfg, lambda p, h, cc, kind=kind: block_apply(
+                    p, cfg, kind, h, positions, prefix_len, cc, cache_pos,
+                    kv_valid))
+                xx, nc, aux = fn(gparams[slot], xx, c)
+                ncs.append(nc)
+                aux_acc = aux_acc + aux
+            return (xx, aux_acc), tuple(ncs)
+
+        gcaches = caches["groups"] if caches is not None else None
+        if gcaches is None:
+            gcaches_b = None
+            (x, aux_total), stacked_nc = jax.lax.scan(
+                lambda c, gp: group_body(c, (gp, None)),
+                (x, aux_total), tuple(params["groups"]))
+        else:
+            (x, aux_total), stacked_nc = jax.lax.scan(
+                group_body, (x, aux_total),
+                (tuple(params["groups"]), tuple(gcaches)))
+        new_caches["groups"] = list(stacked_nc)
+
+    return x, (new_caches if caches is not None else None), aux_total
+
+
+# ----------------------------- cache init ----------------------------------
+def stack_cache_init(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Build the cache pytree matching stack_apply's expectations."""
+    prologue, period, n_groups = stack_layout(cfg)
+
+    def one(kind):
+        if kind == "attn" and cfg.attn_impl == "mla":
+            return mla.MLACache.init(batch, max_len, cfg.mla.kv_lora_rank,
+                                     cfg.mla.qk_rope_head_dim, dtype)
+        if kind == "attn":
+            return attention.KVCache.init(batch, max_len, cfg.n_kv_heads,
+                                          cfg.d_head, dtype)
+        if kind == "local":
+            if cfg.window and cfg.window < max_len:
+                return attention.WindowKVCache.init(
+                    batch, cfg.window, cfg.n_kv_heads, cfg.d_head, dtype)
+            return attention.KVCache.init(batch, max_len, cfg.n_kv_heads,
+                                          cfg.d_head, dtype)
+        if kind == "rglru":
+            r = cfg.rglru.d_rnn or cfg.d_model
+            return rglru.RGLRUState.init(batch, r, cfg.rglru.conv_width)
+        if kind == "ssd":
+            _, n_heads = ssd.ssd_dims(cfg)
+            return ssd.SSDState.init(batch, n_heads, cfg.ssd.d_state,
+                                     cfg.ssd.head_dim, cfg.ssd.conv_width,
+                                     cfg.ssd.n_groups)
+        raise ValueError(kind)
+
+    caches = {"prologue": [one(k) for k in prologue], "groups": []}
+    for kind in period:
+        if n_groups > 0:
+            c = one(kind)
+            caches["groups"].append(
+                jax.tree.map(lambda a: jnp.broadcast_to(
+                    a[None], (n_groups,) + a.shape), c))
+    return caches

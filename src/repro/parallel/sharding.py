@@ -1,0 +1,285 @@
+"""Sharding rules: parameters, optimizer state, batches and caches.
+
+Mesh axes: ("data", "model") single-pod, ("pod", "data", "model") multi-pod.
+  * batch (DP):       ("pod", "data")
+  * FSDP (ZeRO-3):    parameters/optimizer state shard their d_model-ish dim
+                      over "data"; XLA all-gathers per layer inside the scan.
+  * TP (megatron):    heads / d_ff / vocab / experts shard over "model".
+                      Non-divisible dims (e.g. 56 heads on 16) rely on
+                      GSPMD's implicit padding; the waste shows up in the
+                      roofline MODEL_FLOPS/HLO_FLOPS ratio.
+  * EP:               MoE expert stacks shard experts over "model".
+  * caches:           batch over DP axes; kv-heads over "model" when
+                      divisible, else the sequence dim.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def batch_axes(mesh: Mesh, cfg=None) -> Tuple[str, ...]:
+    if cfg is not None and getattr(cfg, "shard_strategy", "tp") == "ep_dp":
+        return tuple(a for a in ("pod", "data", "model")
+                     if a in mesh.axis_names)
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def model_axis_size(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    out = []
+    for k in path:
+        out.append(str(getattr(k, "key", getattr(k, "name", k))))
+    return tuple(out)
+
+
+# parameter rules keyed by leaf name -> spec WITHOUT the scan-stack axis.
+# "F" marks the FSDP axis ("data"), "M" the tensor axis ("model").
+_PARAM_RULES = {
+    # attention
+    "wq": ("F", "M", None), "wk": ("F", "M", None), "wv": ("F", "M", None),
+    "bq": ("M", None), "bk": ("M", None), "bv": ("M", None),
+    "wo": ("M", "F"),
+    # MLA
+    "w_q": ("F", "M", None),
+    "w_dq": ("F", None), "w_uq": (None, "M", None),
+    "w_dkv": ("F", None), "w_uk": (None, "M", None),
+    "w_uv": (None, "M", None), "w_kr": ("F", None),
+    "q_norm": (None,), "kv_norm": (None,),
+    # dense MLP
+    "w_gate": ("F", "M"), "w_up": ("F", "M"), "w_down": ("M", "F"),
+    "b_up": ("M",), "b_down": (None,),
+    # router
+    "router": ("F", None),
+    # rglru
+    "w_x": ("F", "M"), "w_r": ("M", None), "w_i": ("M", None),
+    "b_r": (None,), "b_i": (None,), "lam": ("M",), "w_out": ("M", "F"),
+    # ssd
+    "w_in": ("F", "M"), "A_log": ("M",), "D": ("M",), "dt_bias": ("M",),
+    "norm": ("M",),
+    # conv
+    "w": (None, "M"), "b": ("M",),
+    # norms / embeddings
+    "ln1": (None,), "ln2": (None,), "final_norm": (None,),
+    "embed": ("M", "F"), "head": ("F", "M"),
+}
+
+# expert-stacked leaves ([E, ...]) get "M" on the expert axis instead
+_EXPERT_RULES = {
+    "w_gate": ("M", "F", None), "w_up": ("M", "F", None),
+    "w_down": ("M", None, "F"),
+}
+
+
+def _axis_size(mesh: Mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        return int(np.prod([mesh.shape[a] for a in ax]))
+    return int(mesh.shape[ax])
+
+
+def _fix_divisibility(spec, shape, mesh: Mesh):
+    """jit argument shardings require exact divisibility. For every axis
+    that does not divide its dim, move it to the largest *free* divisible
+    dim (preferring trailing dims, e.g. heads -> head_dim), else drop it."""
+    spec = list(spec)
+    for i, ax in enumerate(spec):
+        if ax is None:
+            continue
+        if shape[i] % _axis_size(mesh, ax) == 0:
+            continue
+        spec[i] = None
+        for j in range(len(spec) - 1, -1, -1):
+            if (spec[j] is None and j != i
+                    and shape[j] % _axis_size(mesh, ax) == 0
+                    and shape[j] >= _axis_size(mesh, ax)):
+                spec[j] = ax
+                break
+    return tuple(spec)
+
+
+def param_spec(path, leaf, cfg, mesh: Mesh) -> P:
+    keys = _path_keys(path)
+    name = keys[-1]
+    scanned = "groups" in keys
+    in_moe = ("mlp" in keys and "shared" not in keys
+              and cfg.mlp_type == "moe")
+    if name == "embed" and cfg.n_codebooks > 1:
+        rule: Tuple = (None, "M", "F")
+    elif name == "head" and cfg.n_codebooks > 1:
+        rule = (None, "F", "M")
+    elif in_moe and name in _EXPERT_RULES and leaf.ndim - int(scanned) == 3:
+        rule = _EXPERT_RULES[name]
+    elif name in _PARAM_RULES:
+        rule = _PARAM_RULES[name]
+    else:
+        rule = (None,) * (leaf.ndim - int(scanned))
+    if len(rule) != leaf.ndim - int(scanned):
+        rule = (None,) * (leaf.ndim - int(scanned))
+    ax = {"F": "data", "M": "model", None: None}
+    if getattr(cfg, "shard_strategy", "tp") == "ep_dp":
+        # only expert stacks use the model axis; everything else
+        # replicates over it (pure-DP attention/MLP + EP)
+        is_expert = in_moe and name in _EXPERT_RULES
+        if not is_expert:
+            ax = {"F": "data", "M": None, None: None}
+    spec = tuple(ax[r] for r in rule)
+    if scanned:
+        spec = (None,) + spec
+    spec = _fix_divisibility(spec, leaf.shape, mesh)
+    return P(*spec)
+
+
+def param_shardings(params, cfg, mesh: Mesh):
+    """Pytree of NamedShardings matching `params` (works on abstract trees
+    of ShapeDtypeStruct too)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [NamedSharding(mesh, param_spec(p, l, cfg, mesh))
+             for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# batches & caches
+# ---------------------------------------------------------------------------
+def batch_spec(mesh: Mesh, ndim: int, shape=None, cfg=None) -> P:
+    ax = batch_axes(mesh, cfg)
+    if shape is not None and (len(shape) == 0
+                              or shape[0] % _axis_size(mesh, ax) != 0):
+        # retry without the model axis (ep_dp with a small batch)
+        ax = batch_axes(mesh)
+        if (len(shape) == 0 or shape[0] % _axis_size(mesh, ax) != 0):
+            return P(*([None] * ndim))
+    return P(ax, *([None] * (ndim - 1)))
+
+
+def batch_shardings(batch, mesh: Mesh, cfg=None):
+    return jax.tree.map(
+        lambda x: NamedSharding(
+            mesh, batch_spec(mesh, np.ndim(x), np.shape(x), cfg)), batch)
+
+
+def cache_spec(path, leaf, cfg, mesh: Mesh) -> P:
+    keys = _path_keys(path)
+    name = keys[-1]
+    scanned = "groups" in keys
+    b = batch_axes(mesh)
+    msz = model_axis_size(mesh)
+    nd = leaf.ndim - int(scanned)
+    if name in ("k", "v"):                      # [B, S, K, Dh]
+        if cfg.n_kv_heads % msz == 0:
+            rule: Tuple = (b, None, "model", None)
+        else:
+            rule = (b, "model", None, None)
+    elif name == "c_kv" or name == "k_rope":    # [B, S, R/Dr]
+        rule = (b, "model", None)
+    elif name == "pos":                         # [W]
+        rule = (None,)
+    elif name == "h" and nd == 2:               # rglru state [B, R]
+        rule = (b, "model")
+    elif name == "h" and nd == 4:               # ssd state [B, H, N, P]
+        rule = (b, "model", None, None)
+    elif nd == 3:                               # conv windows [B, W-1, C]
+        rule = (b, None, "model")
+    else:
+        rule = (b,) + (None,) * (nd - 1)
+    if scanned:
+        rule = (None,) + tuple(rule)
+    rule = _fix_divisibility(tuple(rule), leaf.shape, mesh)
+    return P(*rule)
+
+
+def cache_shardings(caches, cfg, mesh: Mesh):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
+    specs = [NamedSharding(mesh, cache_spec(p, l, cfg, mesh))
+             for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# activation sharding policy (set around jit tracing; consulted by model code
+# via `constrain`). Without explicit constraints GSPMD lets FSDP parameter
+# shardings leak into the activations inside the layer scan (verified: full-
+# batch activations with d_model sharded -> 170 GB/device temps on
+# phi3/train_4k). The policy pins: batch -> DP axes, and optionally
+# seq -> "model" (megatron sequence parallelism) on the residual stream.
+# ---------------------------------------------------------------------------
+_ACT_POLICY: dict = {}
+
+
+class activation_policy:
+    """Context manager: set the logical->mesh mapping for activations."""
+
+    def __init__(self, mesh: Mesh, sequence_parallel: bool = False,
+                 cfg=None):
+        ep_dp = (cfg is not None
+                 and getattr(cfg, "shard_strategy", "tp") == "ep_dp")
+        self.new = {
+            "mesh": mesh,
+            "batch": batch_axes(mesh, cfg),
+            "seq": "model" if (sequence_parallel and not ep_dp) else None,
+        }
+
+    def __enter__(self):
+        global _ACT_POLICY
+        self._old = dict(_ACT_POLICY)
+        _ACT_POLICY.clear()
+        _ACT_POLICY.update(self.new)
+        return self
+
+    def __exit__(self, *exc):
+        global _ACT_POLICY
+        _ACT_POLICY.clear()
+        _ACT_POLICY.update(self._old)
+        return False
+
+
+def constrain(x, logical: Tuple[Any, ...]):
+    """Apply with_sharding_constraint mapping logical axis names
+    ("batch", "seq", None — or a literal mesh axis name like "model")
+    through the active policy. No-op when no policy is set (single-device
+    tests) or when a dim is not divisible by its mesh axis (e.g. decode's
+    seq==1 under sequence parallelism)."""
+    if not _ACT_POLICY:
+        return x
+    mesh = _ACT_POLICY["mesh"]
+
+    def resolve(l):
+        if isinstance(l, str):
+            if l in _ACT_POLICY:
+                return _ACT_POLICY.get(l)
+            if l in mesh.axis_names:
+                return l
+            return None
+        if isinstance(l, tuple):
+            parts = []
+            for e in l:
+                r = resolve(e)
+                if r is None:
+                    continue
+                parts.extend(r if isinstance(r, tuple) else (r,))
+            return tuple(parts) or None
+        return None
+
+    spec = []
+    for i, l in enumerate(logical):
+        ax = resolve(l)
+        if ax is not None:
+            sizes = (np.prod([mesh.shape[a] for a in ax])
+                     if isinstance(ax, tuple) else mesh.shape[ax])
+            if x.shape[i] % int(sizes) != 0:
+                ax = None
+        spec.append(ax)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,107 @@
+"""AdamW with global-norm clipping and warmup+cosine schedule (pure JAX,
+no optax). Optimizer state shards exactly like the parameters (ZeRO-style
+via GSPMD)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+    # fp32 master copy when training with bf16 weights (mixed precision:
+    # every param collective then moves 2-byte tensors; masters live only
+    # in the sharded optimizer state). None => params are the masters.
+    master: Any = None
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    lr_min: float = 3e-5
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def lr_at(cfg: AdamWConfig, step) -> jax.Array:
+    step = jnp.asarray(step, jnp.float32)
+    warm = cfg.lr_peak * step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = cfg.lr_min + 0.5 * (cfg.lr_peak - cfg.lr_min) * (
+        1.0 + jnp.cos(np.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def adamw_init(params, keep_master: bool = False) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                         params)
+    master = (jax.tree.map(lambda p: p.astype(jnp.float32), params)
+              if keep_master else None)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros), master=master)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def _decay_mask(path) -> bool:
+    """Weight decay only on matrices (not norms/bias/1-d params)."""
+    name = str(getattr(path[-1], "key", getattr(path[-1], "name", "")))
+    return not (name.startswith("ln") or name.startswith("b_")
+                or name in ("final_norm", "norm", "q_norm", "kv_norm",
+                            "lam", "A_log", "D", "dt_bias", "b"))
+
+
+def adamw_update(cfg: AdamWConfig, grads, state: AdamWState, params
+                 ) -> Tuple[Any, AdamWState, Dict[str, jax.Array]]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    c1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    flat_g = jax.tree_util.tree_flatten_with_path(grads)[0]
+    decay_flags = [_decay_mask(p) for p, _ in flat_g]
+    treedef = jax.tree.structure(grads)
+    decay_tree = jax.tree_util.tree_unflatten(treedef, decay_flags)
+    masters = state.master if state.master is not None else params
+
+    def upd(g, m, v, p, w, dec):
+        # p: weights used in fwd (possibly bf16); w: fp32 master
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / c1
+        vh = v / c2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if dec:
+            delta = delta + cfg.weight_decay * w.astype(jnp.float32)
+        new_w = w.astype(jnp.float32) - lr * delta
+        return new_w.astype(p.dtype), m, v, new_w
+
+    out = jax.tree.map(upd, grads, state.m, state.v, params, masters,
+                       decay_tree)
+    is4 = lambda t: isinstance(t, tuple) and len(t) == 4
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=is4)
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=is4)
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=is4)
+    new_master = (jax.tree.map(lambda t: t[3], out, is_leaf=is4)
+                  if state.master is not None else None)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(step, new_m, new_v, new_master), metrics

@@ -1,0 +1,6 @@
+import warnings
+
+warnings.filterwarnings("ignore", category=DeprecationWarning)
+
+# NOTE: do NOT set XLA_FLAGS/device-count here — smoke tests and benches
+# must see the real single CPU device; only launch/dryrun.py forces 512.

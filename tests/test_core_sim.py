@@ -1,0 +1,142 @@
+"""DAS core simulator: unit + property tests (hypothesis)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dfg, oracle, simulator as sim, soc, workloads
+
+PARAMS = sim.make_params()
+SUITE = workloads.default_suite(n_instances=12)
+
+
+def _run(mode, mix=5, rate=5, **kw):
+    wl = SUITE.build(mix, rate)
+    return wl, sim.run(mode, wl, PARAMS, **kw)
+
+
+# ---------------------------------------------------------------------------
+# basic invariants
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", [sim.MODE_LUT, sim.MODE_ETF,
+                                  sim.MODE_ETF_IDEAL, sim.MODE_ORACLE])
+def test_all_tasks_complete(mode):
+    wl, r = _run(mode)
+    assert int(r.n_done) == int(wl.n_tasks)
+    assert int(r.ready_drop) == 0
+    assert np.isfinite(float(r.avg_exec_us))
+    assert float(r.avg_exec_us) > 0
+
+
+def test_one_decision_per_task():
+    wl, r = _run(sim.MODE_LUT)
+    assert int(r.n_decisions) == int(wl.n_tasks)
+    # every task got a PE and a finite finish time
+    valid = np.asarray(wl.task_valid)
+    assert (np.asarray(r.pe_of)[valid] >= 0).all()
+    assert np.isfinite(np.asarray(r.finish)[valid]).all()
+
+
+def test_precedence_respected():
+    """No task starts before all its predecessors finish (comm >= 0)."""
+    wl, r = _run(sim.MODE_ETF)
+    finish = np.asarray(r.finish)
+    # start = finish - exec
+    exec_pe = np.asarray(PARAMS.exec_pe)
+    starts = finish - exec_pe[np.asarray(wl.task_type),
+                              np.clip(np.asarray(r.pe_of), 0, None)]
+    for t in range(int(wl.n_tasks)):
+        for k in range(int(wl.n_preds[t])):
+            p = int(wl.preds[t, k])
+            assert starts[t] >= finish[p] - 1e-3, (t, p)
+
+
+def test_pe_no_overlap():
+    """A PE runs at most one task at a time."""
+    wl, r = _run(sim.MODE_LUT)
+    finish = np.asarray(r.finish)
+    pe_of = np.asarray(r.pe_of)
+    exec_pe = np.asarray(PARAMS.exec_pe)
+    starts = finish - exec_pe[np.asarray(wl.task_type),
+                              np.clip(pe_of, 0, None)]
+    for p in range(soc.N_PES):
+        idx = np.where((pe_of == p) & np.asarray(wl.task_valid))[0]
+        iv = sorted(zip(starts[idx], finish[idx]))
+        for (s1, f1), (s2, f2) in zip(iv, iv[1:]):
+            assert s2 >= f1 - 1e-3
+
+
+def test_lut_uses_energy_efficient_cluster():
+    wl, r = _run(sim.MODE_LUT)
+    pe_cl = np.asarray(PARAMS.pe_cluster)
+    lut = np.asarray(PARAMS.lut_cluster)
+    valid = np.asarray(wl.task_valid)
+    got = pe_cl[np.clip(np.asarray(r.pe_of), 0, None)]
+    want = lut[np.asarray(wl.task_type)]
+    assert (got[valid] == want[valid]).all()
+
+
+def test_etf_ideal_not_worse_than_etf():
+    _, r1 = _run(sim.MODE_ETF)
+    _, r2 = _run(sim.MODE_ETF_IDEAL)
+    assert float(r2.avg_exec_us) <= float(r1.avg_exec_us) + 1e-3
+
+
+def test_sched_energy_ordering():
+    """LUT scheduling energy < ETF scheduling energy (same workload)."""
+    _, rl = _run(sim.MODE_LUT)
+    _, re_ = _run(sim.MODE_ETF)
+    assert float(rl.sched_energy_uj) < float(re_.sched_energy_uj)
+
+
+def test_das_mode_runs_and_mixes():
+    from repro.core import das as das_mod
+    ds = oracle.generate(SUITE, PARAMS, mix_indices=[0, 1, 5],
+                         rate_indices=[0, 7, 13])
+    pol = das_mod.fit_policy(ds)
+    wl, r = _run(sim.MODE_DAS, tree=pol.tree)
+    assert int(r.n_done) == int(wl.n_tasks)
+    assert int(r.n_fast) + int(r.n_slow) == int(r.n_decisions)
+
+
+# ---------------------------------------------------------------------------
+# property tests
+# ---------------------------------------------------------------------------
+@hypothesis.settings(max_examples=8, deadline=None)
+@hypothesis.given(
+    mix=st.integers(0, 39),
+    rate=st.integers(0, 13),
+)
+def test_property_completion_and_conservation(mix, rate):
+    wl = SUITE.build(mix, rate)
+    r = sim.run(sim.MODE_LUT, wl, PARAMS)
+    assert int(r.n_done) == int(wl.n_tasks)
+    assert int(r.n_decisions) == int(wl.n_tasks)
+    # energy equals sum of task energies + scheduling energy
+    assert float(r.total_energy_uj) == pytest.approx(
+        float(r.task_energy_uj) + float(r.sched_energy_uj), rel=1e-5)
+    # makespan bounds every instance latency
+    lat = np.asarray(r.inst_exec_us)
+    lat = lat[np.isfinite(lat)]
+    assert (lat >= 0).all()
+
+
+@hypothesis.settings(max_examples=6, deadline=None)
+@hypothesis.given(rate=st.integers(0, 13))
+def test_property_oracle_labels_well_formed(rate):
+    wl = SUITE.build(5, rate)
+    feats, labels, info = oracle.label_one_run(wl, PARAMS)
+    assert feats.shape[0] == labels.shape[0] == info["n_decisions"]
+    assert set(np.unique(labels)).issubset({0, 1})
+    assert feats.shape[1] == sim.N_FEATURES
+    assert np.isfinite(feats).all()
+
+
+def test_dfg_graphs_are_dags():
+    for name, g in dfg.APPS.items():
+        d = g.depths()
+        assert (d >= 0).all(), name
+        for i, preds in enumerate(g.preds):
+            for p in preds:
+                assert p < i, name

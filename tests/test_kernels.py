@@ -1,0 +1,144 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles,
+interpret mode (deliverable c)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.etf_ft import kernel as etfk, ref as etfr
+from repro.kernels.flash_attention import kernel as fak, ref as far
+from repro.kernels.rg_lru import kernel as rgk, ref as rgr
+from repro.kernels.ssd_scan import kernel as ssdk, ref as ssdr
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+FLASH_CASES = [
+    # B, S, H, K, D, window, softcap, dtype
+    (1, 256, 4, 4, 64, 0, 0.0, "float32"),     # MHA
+    (2, 256, 8, 2, 64, 0, 0.0, "float32"),     # GQA
+    (1, 256, 4, 1, 128, 0, 0.0, "float32"),    # MQA, d128
+    (1, 512, 4, 2, 64, 128, 0.0, "float32"),   # sliding window
+    (1, 256, 4, 4, 64, 0, 30.0, "float32"),    # softcap
+    (2, 256, 8, 2, 64, 0, 0.0, "bfloat16"),    # bf16
+    (1, 384, 6, 3, 32, 0, 0.0, "float32"),     # non-128 block tail (S=384)
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_attention_vs_oracle(case):
+    B, S, H, K, D, W, cap, dt = case
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, D), dt)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, K, D), dt)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, K, D), dt)
+    out = fak.flash_attention_fwd(q, k, v, causal=True, window=W,
+                                  softcap=cap, block_q=128, block_k=128,
+                                  interpret=True)
+    expect = far.mha_reference(q, k, v, causal=True, window=W, softcap=cap)
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                - expect.astype(jnp.float32))))
+    tol = 2e-2 if dt == "bfloat16" else 1e-4
+    assert err < tol, (case, err)
+
+
+def test_flash_block_shape_sweep():
+    B, S, H, K, D = 1, 256, 2, 2, 64
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, K, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, K, D))
+    expect = far.mha_reference(q, k, v)
+    for bq, bk in [(64, 64), (128, 64), (64, 128), (256, 256)]:
+        out = fak.flash_attention_fwd(q, k, v, block_q=bq, block_k=bk,
+                                      interpret=True)
+        assert float(jnp.max(jnp.abs(out - expect))) < 1e-4, (bq, bk)
+
+
+# ---------------------------------------------------------------------------
+# ssd scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [
+    (1, 32, 2, 8, 4, 16), (2, 64, 3, 16, 8, 16), (1, 128, 2, 16, 16, 32),
+])
+def test_ssd_vs_sequential_oracle(shape):
+    B, S, H, P, N, Q = shape
+    ks = [jax.random.PRNGKey(i) for i in range(5)]
+    x = jax.random.normal(ks[0], (B, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bh = jax.random.normal(ks[3], (B, S, H, N)) * 0.5
+    Ch = jax.random.normal(ks[4], (B, S, H, N)) * 0.5
+    y, h = ssdk.ssd_fwd(x, dt, A, Bh, Ch, chunk=Q, interpret=True)
+    y2, h2 = ssdr.ssd_reference(x, dt, A, Bh, Ch)
+    assert float(jnp.max(jnp.abs(y - y2))) < 1e-4
+    assert float(jnp.max(jnp.abs(h - h2))) < 1e-4
+
+
+def test_ssd_bf16_tolerance():
+    B, S, H, P, N, Q = 1, 64, 2, 16, 8, 16
+    x = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, P),
+                          jnp.bfloat16) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1),
+                                           (B, S, H))) * 0.1
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (H,)))
+    Bh = (jax.random.normal(jax.random.PRNGKey(3), (B, S, H, N)) * 0.5)
+    Ch = (jax.random.normal(jax.random.PRNGKey(4), (B, S, H, N)) * 0.5)
+    y, _ = ssdk.ssd_fwd(x, dt, A, Bh, Ch, chunk=Q, interpret=True)
+    y2, _ = ssdr.ssd_reference(x.astype(jnp.float32), dt, A, Bh, Ch)
+    rel = float(jnp.max(jnp.abs(y.astype(jnp.float32) - y2))) / (
+        float(jnp.max(jnp.abs(y2))) + 1e-9)
+    assert rel < 3e-2
+
+
+# ---------------------------------------------------------------------------
+# rg-lru scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(1, 32, 128), (2, 64, 256), (1, 96, 384)])
+def test_rg_lru_vs_oracle(shape):
+    B, S, C = shape
+    a = jax.random.uniform(jax.random.PRNGKey(0), (B, S, C),
+                           minval=0.6, maxval=0.999)
+    b = jax.random.normal(jax.random.PRNGKey(1), (B, S, C)) * 0.1
+    out = rgk.rg_lru_fwd(a, b, chunk=16, block_c=128, interpret=True)
+    expect = rgr.rg_lru_reference(a, b)
+    assert float(jnp.max(jnp.abs(out - expect))) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# etf finish-time search
+# ---------------------------------------------------------------------------
+@hypothesis.settings(max_examples=15, deadline=None)
+@hypothesis.given(seed=st.integers(0, 1000), b=st.integers(1, 8),
+                  r=st.integers(2, 32))
+def test_etf_kernel_property(seed, b, r):
+    P = 19
+    k = jax.random.PRNGKey(seed)
+    ks = jax.random.split(k, 4)
+    avail = jax.random.uniform(ks[0], (b, r, P)) * 10
+    free = jax.random.uniform(ks[1], (b, P)) * 10
+    ex = jnp.where(jax.random.uniform(ks[2], (b, r, P)) < 0.3, jnp.inf,
+                   jax.random.uniform(ks[3], (b, r, P)) * 5)
+    now = jnp.zeros((b,))
+    ft1, s1, p1 = etfk.etf_ft_search(avail, free, ex, now, interpret=True)
+    ft2, s2, p2 = etfr.etf_ft_reference(avail, free, ex, now)
+    np.testing.assert_allclose(np.asarray(ft1), np.asarray(ft2), rtol=1e-6)
+    assert (np.asarray(s1) == np.asarray(s2)).all()
+    assert (np.asarray(p1) == np.asarray(p2)).all()
+
+
+def test_etf_kernel_min_is_achievable():
+    """The returned (slot, pe) must actually achieve the returned FT."""
+    b, r, P = 3, 8, 19
+    ks = jax.random.split(jax.random.PRNGKey(9), 4)
+    avail = jax.random.uniform(ks[0], (b, r, P)) * 10
+    free = jax.random.uniform(ks[1], (b, P)) * 10
+    ex = jax.random.uniform(ks[2], (b, r, P)) * 5
+    now = jnp.zeros((b,))
+    ft, s, p = etfk.etf_ft_search(avail, free, ex, now, interpret=True)
+    for i in range(b):
+        si, pi = int(s[i]), int(p[i])
+        direct = max(float(avail[i, si, pi]), float(free[i, pi]), 0.0) \
+            + float(ex[i, si, pi])
+        assert abs(direct - float(ft[i])) < 1e-5

@@ -1,0 +1,140 @@
+"""LM details: chunked CE equivalence, banded local attention, vocab
+padding masks, head modes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import attention as A
+from repro.models import lm
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_chunked_ce_matches_unchunked():
+    cfg = configs.get_smoke_config("yi-34b", d_model=64, vocab=128)
+    p = lm.lm_init(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 64), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    l1, _ = lm.loss_fn(p, cfg, batch, loss_chunk=16)
+    l2, _ = lm.loss_fn(p, cfg, batch, loss_chunk=0)
+    assert float(jnp.abs(l1 - l2)) < 1e-3
+
+
+def test_banded_equals_masked_local_attention():
+    B, S, H, K, D, W = 2, 96, 4, 2, 16, 32
+    q = jax.random.normal(jax.random.PRNGKey(1), (B, S, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(2), (B, S, K, D))
+    v = jax.random.normal(jax.random.PRNGKey(3), (B, S, K, D))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    bias = A._mask_bias(pos, pos, W, None)
+    ref = A.sdpa(q, k, v, bias)
+    out = A.banded_sdpa(q, k, v, pos, W)
+    assert float(jnp.max(jnp.abs(ref - out))) < 1e-5
+
+
+def test_window_ring_cache_matches_full_cache():
+    """Decode with the ring buffer == decode with a full-length cache."""
+    import dataclasses
+    cfg = configs.scaled_down(configs.get_config("recurrentgemma-9b"),
+                              window=8)
+    p = lm.lm_init(KEY, cfg)
+    B, S = 1, 24
+    toks = jax.random.randint(jax.random.PRNGKey(4), (B, S + 4), 0,
+                              cfg.vocab)
+    # full forward reference for the final logits
+    full_logits, _, _ = lm.forward(p, cfg, toks)
+    # ring-cache decode of the last 4 tokens
+    caches = lm.init_caches(cfg, B, max_len=S + 4, dtype=jnp.float32)
+    _, caches = lm.prefill(p, cfg, toks[:, :S], caches)
+    logits = None
+    for i in range(4):
+        logits, caches = lm.decode_step(p, cfg, toks[:, S + i], S + i,
+                                        caches)
+    rel = (float(jnp.max(jnp.abs(logits - full_logits[:, -1])))
+           / (float(jnp.max(jnp.abs(full_logits[:, -1]))) + 1e-9))
+    assert rel < 5e-2, rel
+
+
+def test_vocab_padding_masked_in_head():
+    cfg = configs.get_smoke_config("mamba2-780m", vocab=100)  # pads to 112
+    assert cfg.vocab_padded == 112
+    p = lm.lm_init(KEY, cfg)
+    toks = jax.random.randint(KEY, (1, 16), 0, cfg.vocab)
+    logits, _, _ = lm.forward(p, cfg, toks)
+    assert logits.shape[-1] == 112
+    assert float(logits[..., 100:].max()) < -1e8
+
+
+def test_head_mode_last_matches_full():
+    cfg = configs.get_smoke_config("phi3-mini-3.8b", d_model=64, vocab=128)
+    p = lm.lm_init(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab)
+    all_logits, _, _ = lm.forward(p, cfg, toks, head_mode="all")
+    last_logits, _, _ = lm.forward(p, cfg, toks, head_mode="last")
+    np.testing.assert_allclose(np.asarray(last_logits[:, 0]),
+                               np.asarray(all_logits[:, -1]), rtol=1e-5)
+
+
+def test_mla_absorbed_decode_matches_expanded():
+    import dataclasses
+    cfg = configs.get_smoke_config("minicpm3-4b")
+    cfga = dataclasses.replace(cfg, mla_absorb=True)
+    p = lm.lm_init(jax.random.PRNGKey(7), cfg)
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(8), (B, S + 1), 0,
+                              cfg.vocab)
+    out = {}
+    for name, c in [("exp", cfg), ("abs", cfga)]:
+        caches = lm.init_caches(c, B, max_len=S + 1, dtype=jnp.float32)
+        _, caches = lm.prefill(p, c, toks[:, :S], caches)
+        logits, _ = lm.decode_step(p, c, toks[:, S], S, caches)
+        out[name] = logits
+    rel = (float(jnp.max(jnp.abs(out["exp"] - out["abs"])))
+           / (float(jnp.max(jnp.abs(out["exp"]))) + 1e-9))
+    assert rel < 2e-2, rel
+
+
+def test_moe_sharded_dispatch_matches_global():
+    import dataclasses
+    cfg0 = configs.get_smoke_config("dbrx-132b")
+    hi_cap = dataclasses.replace(cfg0.moe, capacity_factor=4.0)
+    cfg1 = dataclasses.replace(cfg0, moe=hi_cap)
+    cfg4 = dataclasses.replace(
+        cfg0, moe=dataclasses.replace(hi_cap, n_dispatch_shards=4))
+    p = lm.lm_init(KEY, cfg1)
+    toks = jax.random.randint(KEY, (4, 32), 0, cfg1.vocab)
+    l1, _ = lm.loss_fn(p, cfg1, {"tokens": toks, "labels": toks})
+    l4, _ = lm.loss_fn(p, cfg4, {"tokens": toks, "labels": toks})
+    assert float(jnp.abs(l1 - l4)) < 2e-2
+
+
+def test_bf16_master_training_step():
+    """bf16 weights + fp32 masters: loss decreases, params stay bf16."""
+    from repro.train import optimizer as optim
+    cfg = configs.get_smoke_config("phi3-mini-3.8b", n_layers=2,
+                                   d_model=64, vocab=128)
+    params = jax.tree.map(lambda p: p.astype(jnp.bfloat16),
+                          lm.lm_init(KEY, cfg))
+    state = optim.adamw_init(params, keep_master=True)
+    ocfg = optim.AdamWConfig(lr_peak=5e-3, warmup_steps=1, total_steps=20)
+    toks = jax.random.randint(KEY, (4, 64), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+
+    @jax.jit
+    def step(p, s):
+        (l, _), g = jax.value_and_grad(
+            lambda pp: lm.loss_fn(pp, cfg, batch), has_aux=True)(p)
+        p2, s2, _ = optim.adamw_update(ocfg, g, s, p)
+        return p2, s2, l
+
+    l0 = None
+    for _ in range(8):
+        params, state, l = step(params, state)
+        l0 = float(l) if l0 is None else l0
+    assert float(l) < l0
+    assert all(x.dtype == jnp.bfloat16 for x in jax.tree.leaves(params)
+               if x.dtype != jnp.int32)
+    assert all(x.dtype == jnp.float32
+               for x in jax.tree.leaves(state.master))

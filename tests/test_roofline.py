@@ -1,0 +1,70 @@
+"""Roofline + dry-run artifact tests (consume dryrun_results.json when
+present; pure-unit otherwise)."""
+import json
+import os
+
+import pytest
+
+from repro import configs
+from repro.launch import roofline
+from repro.launch.shapes import SHAPES, applicable, cells
+
+RESULTS = "/root/repo/dryrun_results.json"
+
+
+def test_cell_enumeration_and_skips():
+    cfgs = {a: configs.get_config(a) for a in configs.ARCH_IDS}
+    cs = cells(cfgs)
+    # 10 archs x 4 shapes = 40; 8 full-attention archs skip long_500k
+    assert len(cs) == 40 - 8
+    for a in ("mamba2-780m", "recurrentgemma-9b"):
+        assert (a, "long_500k") in cs
+    for a in ("yi-34b", "qwen2-72b", "dbrx-132b"):
+        assert (a, "long_500k") not in cs
+        assert applicable(cfgs[a], "long_500k") is not None
+
+
+def test_roofline_terms_math():
+    cell = {
+        "status": "ok", "n_devices": 256,
+        "dot_flops_per_dev": 197e12,       # exactly 1s of compute
+        "dot_bytes_per_dev": 819e9 / 2,    # 0.5s of memory
+        "collective_bytes": {"all-gather": 50e9 / 4},
+        "model_flops_global": 197e12 * 256 / 2,
+    }
+    t = roofline.roofline_terms(cell)
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["memory_s"] == pytest.approx(0.5)
+    assert t["collective_s"] == pytest.approx(0.25)
+    assert t["dominant"] == "compute_s"
+    assert t["roofline_fraction"] == pytest.approx(0.5)
+    assert t["useful_ratio"] == pytest.approx(0.5)
+
+
+def test_tpu_corrected_bytes_preferred():
+    cell = {
+        "status": "ok", "n_devices": 256,
+        "dot_flops_per_dev": 1e12, "dot_bytes_per_dev": 1e9,
+        "collective_bytes": {"all-reduce": 100e9},
+        "collective_bytes_tpu": {"all-reduce": 50e9},
+        "model_flops_global": 1e12 * 256,
+    }
+    t = roofline.roofline_terms(cell)
+    assert t["collective_s"] == pytest.approx(1.0)   # uses the 50GB number
+
+
+@pytest.mark.skipif(not os.path.exists(RESULTS),
+                    reason="dry-run artifact not present")
+def test_dryrun_artifact_complete_and_clean():
+    with open(RESULTS) as f:
+        results = json.load(f)
+    assert len(results) == 80                      # 40 cells x 2 meshes
+    assert sum(r["status"] == "failed" for r in results) == 0
+    assert sum(r["status"] == "skipped" for r in results) == 16
+    ok = [r for r in results if r["status"] == "ok"]
+    assert len(ok) == 64
+    rows = roofline.build_table(results)
+    for r in rows:
+        if r.get("status") == "ok":
+            assert r["step_time_bound_s"] > 0
+            assert 0 <= r["roofline_fraction"] <= 1.5

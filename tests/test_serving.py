@@ -1,0 +1,70 @@
+"""Serving engine + DAS dispatch tests."""
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.serve import costmodel as cm
+from repro.serve import dispatch as dsp
+from repro.serve import engine as eng
+
+CFG = eng.EngineConfig(n_replicas=3, max_batch=8)
+SPEC = cm.ReplicaSpec("t", n_chips=4)
+MC = cm.ModelCost.from_config(configs.get_config("phi3-mini-3.8b"))
+
+
+def _run(dispatcher, rate=20.0, n=60, seed=0):
+    reqs = eng.poisson_requests(rate, n, seed)
+    return eng.run_engine(reqs, dispatcher, CFG, SPEC, MC)
+
+
+def test_all_requests_complete():
+    res = _run(dsp.LUTDispatcher(3))
+    assert all(r.done_s >= 0 for r in res.requests)
+    assert all(r.first_token_s >= r.arrival_s for r in res.requests
+               if r.first_token_s >= 0)
+    assert res.makespan_s > 0 and np.isfinite(res.energy_j)
+
+
+def test_request_ordering_invariants():
+    res = _run(dsp.ETFDispatcher(), rate=50, n=40)
+    for r in res.requests:
+        assert r.dispatched_s >= r.arrival_s
+        assert r.done_s >= r.first_token_s >= r.dispatched_s
+        assert r.tokens_out >= r.gen_len
+
+
+def test_etf_balances_better_than_lut_under_skew():
+    """With heavy load, ETF's finish-time search should not be much worse
+    than the static table (usually better)."""
+    r_lut = _run(dsp.LUTDispatcher(3), rate=100, n=100)
+    r_etf = _run(dsp.ETFDispatcher(), rate=100, n=100)
+    assert r_etf.mean_latency_s < r_lut.mean_latency_s * 1.5
+
+
+def test_dispatch_latency_accounting():
+    r = _run(dsp.ETFDispatcher(), rate=30, n=50)
+    assert r.dispatch_busy_s > 0
+    r2 = _run(dsp.LUTDispatcher(3), rate=30, n=50)
+    assert r2.dispatch_busy_s < r.dispatch_busy_s
+
+
+def test_das_dispatcher_trains_and_runs():
+    scen = [(5, 40, 0), (80, 40, 0)]
+    das = dsp.train_das_dispatcher(scen, CFG, SPEC, MC)
+    assert 0.0 <= das.label_slow_frac <= 1.0
+    res = _run(das, rate=40, n=60)
+    assert res.dispatch_fast + res.dispatch_slow == 60
+
+
+def test_cost_model_monotonicity():
+    assert cm.prefill_seconds(MC, SPEC, 2048) > cm.prefill_seconds(
+        MC, SPEC, 512)
+    assert cm.decode_step_seconds(MC, SPEC, 16, 4096) >= \
+        cm.decode_step_seconds(MC, SPEC, 1, 4096)
+    # MLA cache smaller than GQA cache per token
+    mla = cm.ModelCost.from_config(configs.get_config("minicpm3-4b"))
+    gqa = cm.ModelCost.from_config(configs.get_config("yi-34b"))
+    assert mla.kv_bytes_per_token < gqa.kv_bytes_per_token
+    # SSM has no per-token cache growth
+    ssm = cm.ModelCost.from_config(configs.get_config("mamba2-780m"))
+    assert ssm.kv_bytes_per_token == 0.0

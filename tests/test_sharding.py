@@ -1,0 +1,138 @@
+"""Sharding rules + dry-run machinery tests (CPU: 1-device mesh semantics,
+plus pure-python checks of the spec rules against the production mesh
+geometry via abstract arrays)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.launch import hlo_analysis
+from repro.models import lm
+from repro.parallel import sharding
+from repro.train import optimizer as optim
+
+
+class FakeMesh:
+    """Geometry-only stand-in for the 16x16 production mesh (no devices)."""
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _abs_params(arch):
+    cfg = configs.get_config(arch)
+    return cfg, jax.eval_shape(lambda k: lm.lm_init(k, cfg),
+                               jax.random.PRNGKey(0))
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_param_specs_divisible(arch):
+    """Every parameter's sharding must divide its dims on the production
+    mesh — the exact precondition jit enforces."""
+    cfg, params = _abs_params(arch)
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    for path, leaf in flat:
+        spec = sharding.param_spec(path, leaf, cfg, MESH)
+        for dim, ax in zip(leaf.shape, tuple(spec)):
+            if ax is None:
+                continue
+            size = sharding._axis_size(MESH, ax)
+            assert dim % size == 0, (arch, path, leaf.shape, spec)
+
+
+@pytest.mark.parametrize("arch", ["yi-34b", "deepseek-v2-lite-16b",
+                                  "mamba2-780m", "recurrentgemma-9b"])
+def test_cache_specs_divisible(arch):
+    cfg = configs.get_config(arch)
+    caches = jax.eval_shape(lambda: lm.init_caches(cfg, 128, 1024))
+    flat = jax.tree_util.tree_flatten_with_path(caches)[0]
+    for path, leaf in flat:
+        spec = sharding.cache_spec(path, leaf, cfg, MESH3)
+        for dim, ax in zip(leaf.shape, tuple(spec)):
+            if ax is None:
+                continue
+            assert dim % sharding._axis_size(MESH3, ax) == 0, (arch, path)
+
+
+def test_moe_experts_sharded_on_model():
+    cfg, params = _abs_params("dbrx-132b")
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    found = 0
+    for path, leaf in flat:
+        keys = sharding._path_keys(path)
+        if ("mlp" in keys and keys[-1] in ("w_gate", "w_up", "w_down")
+                and leaf.ndim >= 3 and 16 in leaf.shape):
+            spec = tuple(sharding.param_spec(path, leaf, cfg, MESH))
+            assert "model" in spec, (path, spec)
+            found += 1
+    assert found >= 3
+
+
+def test_batch_spec_small_batch_replicated():
+    assert tuple(sharding.batch_spec(MESH3, 1, (1,))) == (None,)
+    sp = sharding.batch_spec(MESH3, 2, (128, 5))
+    assert sp[0] == ("pod", "data")
+
+
+def test_vocab_padding():
+    cfg = configs.get_config("minicpm3-4b")
+    assert cfg.vocab_padded % 16 == 0
+    assert cfg.vocab_padded >= cfg.vocab
+    cfg2 = configs.get_config("yi-34b")
+    assert cfg2.vocab_padded == cfg2.vocab
+
+
+# ---------------------------------------------------------------------------
+# hlo_analysis unit tests
+# ---------------------------------------------------------------------------
+HLO_SNIPPET = """
+HloModule test
+
+%cond.1 (arg.1: (s32[], f32[8,8])) -> pred[] {
+  %c = s32[] constant(10)
+  %p = s32[] parameter(0)
+  ROOT %cmp = pred[] compare(%gte, %c), direction=LT
+}
+
+%body.1 (arg.2: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %w = f32[8,16]{1,0} parameter(1)
+  %x = f32[16,8]{1,0} parameter(2)
+  %dot.5 = f32[8,8]{1,0} dot(%w, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ag = f32[8,8]{1,0} all-gather(%dot.5), dimensions={0}
+}
+
+ENTRY %main (p0: f32[8,8]) -> f32[8,8] {
+  %init = f32[8,8]{1,0} parameter(0)
+  %wh = (s32[], f32[8,8]) while(%t), condition=%cond.1, body=%body.1
+  %ar = f32[8,8]{1,0} all-reduce(%gte2), to_apply=%add
+}
+"""
+
+
+def test_hlo_trip_weighted_analysis():
+    res = hlo_analysis.analyze(HLO_SNIPPET)
+    # dot: 2*8*8*16 = 2048 flops, x10 trips = 20480
+    assert res["dot_flops"] == 20480
+    cb = res["collective_bytes"]
+    # all-gather inside the loop: 8*8*4 bytes x 10; all-reduce outside: x1
+    assert cb["all-gather"] == 8 * 8 * 4 * 10
+    assert cb["all-reduce"] == 8 * 8 * 4
+    assert res["n_while"] == 1
+
+
+def test_hlo_symbols_resolution():
+    syms = hlo_analysis.build_symbols(HLO_SNIPPET)
+    assert syms["dot.5"] == ("f32", "8,8")
+    assert syms["w"] == ("f32", "8,16")
+
+
+def test_activation_policy_constrain_noop_without_policy():
+    x = jnp.ones((4, 8))
+    y = sharding.constrain(x, ("batch", None))
+    assert y.shape == x.shape
