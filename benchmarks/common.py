@@ -1,12 +1,24 @@
 """Shared benchmark infrastructure: the trained DAS policy, the workload
 suite and scheduler evaluation helpers. Results are cached in-process so
-`benchmarks.run` trains the classifier once."""
+`benchmarks.run` trains the classifier once.
+
+All (mix x rate) sweeps — oracle generation and the per-mode evaluation
+grids — go through the batched simulator path (`sim.run_batch`, one
+`jax.vmap`ed call per mode instead of one `sim.run` per cell).
+
+Environment knobs:
+  REPRO_BENCH_INSTANCES  frames per workload (default 60)
+  REPRO_BENCH_FULL=1     train/eval on the full 40 mixes x 14 rates grid
+  REPRO_BENCH_BATCH      scenario-axis chunk size for batched sweeps
+                         (default 16; bounds peak memory, results are
+                         independent of the value)
+"""
 from __future__ import annotations
 
 import functools
 import os
 import time
-from typing import Dict
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
@@ -16,6 +28,8 @@ N_INSTANCES = int(os.environ.get("REPRO_BENCH_INSTANCES", "60"))
 # training scenarios: a representative subset (all 40 x 14 in the full run,
 # REPRO_BENCH_FULL=1)
 FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+# scenario-axis chunk size for run_batch (memory bound, not a result knob)
+BATCH = int(os.environ.get("REPRO_BENCH_BATCH", "16"))
 
 TRAIN_MIXES = list(range(40)) if FULL else [0, 1, 2, 3, 4, 5, 8, 12, 17, 22]
 TRAIN_RATES = list(range(14)) if FULL else [0, 3, 5, 7, 9, 11, 12, 13]
@@ -35,7 +49,8 @@ def params() -> sim.SimParams:
 def dataset(metric: str = "avg_exec_us") -> oracle.OracleDataset:
     t0 = time.time()
     ds = oracle.generate(suite(), params(), mix_indices=TRAIN_MIXES,
-                         rate_indices=TRAIN_RATES, metric=metric)
+                         rate_indices=TRAIN_RATES, metric=metric,
+                         batch_size=BATCH)
     print(f"# oracle dataset[{metric}]: {len(ds)} samples "
           f"(S-frac {ds.labels.mean():.3f}) in {time.time()-t0:.0f}s")
     return ds
@@ -57,26 +72,54 @@ def das_policy_auto(metric: str = "avg_exec_us") -> das.DASPolicy:
     return das.fit_policy(ds, feature_ids=sel)
 
 
+@functools.lru_cache(maxsize=None)
+def _cell_workload(mix_idx: int, rate_idx: int) -> workloads.FlatWorkload:
+    return suite().build(mix_idx, rate_idx)
+
+
 def eval_cell(mix_idx: int, rate_idx: int, mode: int,
               tree=None, rate_threshold: float = 1e9) -> sim.SimResult:
-    wl = suite().build(mix_idx, rate_idx)
-    return sim.run(mode, wl, params(), tree=tree,
-                   rate_threshold=rate_threshold)
+    return sim.run(mode, _cell_workload(mix_idx, rate_idx), params(),
+                   tree=tree, rate_threshold=rate_threshold)
 
 
-def eval_all_modes(mix_idx: int, rate_idx: int,
-                   with_fs: bool = False) -> Dict[str, sim.SimResult]:
-    """DAS = paper feature pair (rate, big-cluster availability);
+def eval_grid(cells: Sequence[Tuple[int, int]], mode: int,
+              tree=None, rate_threshold: float = 1e9) -> List[sim.SimResult]:
+    """One batched sweep of `mode` over `[(mix_idx, rate_idx), ...]`.
+
+    Returns per-cell `SimResult`s (same order as `cells`), computed by a
+    single `run_batch` call chunked by `REPRO_BENCH_BATCH`.
+    """
+    stacked = workloads.stack_workloads(
+        [_cell_workload(mi, ri) for mi, ri in cells]
+    )
+    res = sim.run_batch(mode, stacked, params(), tree=tree,
+                        rate_threshold=rate_threshold, batch_size=BATCH)
+    return [sim.result_at(res, k) for k in range(len(cells))]
+
+
+def eval_modes_grid(cells: Sequence[Tuple[int, int]],
+                    with_fs: bool = False) -> Dict[str, List[sim.SimResult]]:
+    """All scheduler modes over a cell grid, one batched sweep per mode.
+
+    DAS = paper feature pair (rate, big-cluster availability);
     DAS-FS = the same depth-2 tree with the 2 features our feature-selection
     pass picks on these profiles (the paper's own methodology, IV-B)."""
     pol = das_policy()
     out = {
-        "LUT": eval_cell(mix_idx, rate_idx, sim.MODE_LUT),
-        "ETF": eval_cell(mix_idx, rate_idx, sim.MODE_ETF),
-        "ETF-ideal": eval_cell(mix_idx, rate_idx, sim.MODE_ETF_IDEAL),
-        "DAS": eval_cell(mix_idx, rate_idx, sim.MODE_DAS, tree=pol.tree),
+        "LUT": eval_grid(cells, sim.MODE_LUT),
+        "ETF": eval_grid(cells, sim.MODE_ETF),
+        "ETF-ideal": eval_grid(cells, sim.MODE_ETF_IDEAL),
+        "DAS": eval_grid(cells, sim.MODE_DAS, tree=pol.tree),
     }
     if with_fs:
-        out["DAS-FS"] = eval_cell(mix_idx, rate_idx, sim.MODE_DAS,
+        out["DAS-FS"] = eval_grid(cells, sim.MODE_DAS,
                                   tree=das_policy_auto().tree)
     return out
+
+
+def eval_all_modes(mix_idx: int, rate_idx: int,
+                   with_fs: bool = False) -> Dict[str, sim.SimResult]:
+    """Single-cell view of `eval_modes_grid` (kept for spot checks)."""
+    grid = eval_modes_grid([(mix_idx, rate_idx)], with_fs=with_fs)
+    return {k: v[0] for k, v in grid.items()}

@@ -32,10 +32,13 @@ def run(csv=False):
             print(f"{'rate':>7} | {'LUT':>8} {'ETF':>8} {'DAS':>8} "
                   f"{'DAS-FS':>8} {'ETFideal':>8} | {'EDP LUT':>9} "
                   f"{'EDP ETF':>9} {'EDP DAS-FS':>10}")
-        for ri in RATE_IDX:
-            t0 = time.perf_counter()
-            res = common.eval_all_modes(mi, ri, with_fs=True)
-            us = time.perf_counter() - t0
+        # one batched sweep per mode over this workload's rate axis
+        t0 = time.perf_counter()
+        grid = common.eval_modes_grid([(mi, ri) for ri in RATE_IDX],
+                                      with_fs=True)
+        us = (time.perf_counter() - t0) / len(RATE_IDX)
+        for idx, ri in enumerate(RATE_IDX):
+            res = {name: per_cell[idx] for name, per_cell in grid.items()}
             rate = float(workloads.DATA_RATES_MBPS[ri])
             r = {"workload": title, "rate_mbps": rate, "us_per_call": us,
                  **{f"exec_{k}": float(v.avg_exec_us)

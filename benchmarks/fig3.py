@@ -18,10 +18,12 @@ def run(csv=False):
     print(f"{'rate':>7} | {'fast%':>6} {'slow%':>6} | "
           f"{'E_LUT uJ':>9} {'E_ETF uJ':>9} {'E_DAS uJ':>9} | "
           f"{'DAS ns/dec':>10} {'DAS nJ/dec':>10}")
-    for ri in range(len(workloads.DATA_RATES_MBPS)):
-        t0 = time.perf_counter()
-        res = common.eval_all_modes(MIX, ri)
-        us = time.perf_counter() - t0
+    all_rates = range(len(workloads.DATA_RATES_MBPS))
+    t0 = time.perf_counter()
+    grid = common.eval_modes_grid([(MIX, ri) for ri in all_rates])
+    us = (time.perf_counter() - t0) / len(workloads.DATA_RATES_MBPS)
+    for ri in all_rates:
+        res = {name: per_cell[ri] for name, per_cell in grid.items()}
         d = res["DAS"]
         n = max(int(d.n_decisions), 1)
         fast = int(d.n_fast) / n

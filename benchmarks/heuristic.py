@@ -32,16 +32,16 @@ def run(csv=False):
     total = 0
     gains = []
     t0 = time.perf_counter()
-    for mi in MIXES:
-        for ri in [0, 3, 5, 7, 9, 11, 13]:
-            d = common.eval_cell(mi, ri, sim.MODE_DAS, tree=pol.tree)
-            h = common.eval_cell(mi, ri, sim.MODE_THRESHOLD,
-                                 rate_threshold=thr)
-            total += 1
-            gain = float(h.avg_exec_us) / float(d.avg_exec_us)
-            gains.append(gain)
-            if gain >= 1.0:
-                das_wins += 1
+    cells = [(mi, ri) for mi in MIXES for ri in [0, 3, 5, 7, 9, 11, 13]]
+    # batched sweeps: one DAS grid, one static-threshold grid
+    d_grid = common.eval_grid(cells, sim.MODE_DAS, tree=pol.tree)
+    h_grid = common.eval_grid(cells, sim.MODE_THRESHOLD, rate_threshold=thr)
+    for d, h in zip(d_grid, h_grid):
+        total += 1
+        gain = float(h.avg_exec_us) / float(d.avg_exec_us)
+        gains.append(gain)
+        if gain >= 1.0:
+            das_wins += 1
     us = time.perf_counter() - t0
     mean_gain = float(np.mean(gains))
     if csv:

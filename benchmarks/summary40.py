@@ -28,21 +28,25 @@ def run(csv=False):
     sp_vs_lut, edp_vs_lut = [], []
     das_best = 0
     cells = 0
-    for mi in mixes:
-        for ri in LOW_RATES + HIGH_RATES:
-            res = common.eval_all_modes(mi, ri, with_fs=True)
-            d, l, e = res["DAS-FS"], res["LUT"], res["ETF"]
-            de = common.eval_cell(mi, ri, sim.MODE_DAS, tree=pol_edp.tree)
-            cells += 1
-            if float(d.avg_exec_us) <= min(float(l.avg_exec_us),
-                                           float(e.avg_exec_us)) * 1.02:
-                das_best += 1
-            if ri in LOW_RATES:
-                sp_vs_etf.append(float(e.avg_exec_us) / float(d.avg_exec_us))
-                edp_vs_etf.append(1 - float(de.edp) / float(e.edp))
-            else:
-                sp_vs_lut.append(float(l.avg_exec_us) / float(d.avg_exec_us))
-                edp_vs_lut.append(1 - float(de.edp) / float(l.edp))
+    grid_cells = [(mi, ri) for mi in mixes for ri in LOW_RATES + HIGH_RATES]
+    # one batched sweep per mode over the whole (mix x rate) grid
+    grid = common.eval_modes_grid(grid_cells, with_fs=True)
+    de_grid = common.eval_grid(grid_cells, sim.MODE_DAS, tree=pol_edp.tree)
+    for k, (mi, ri) in enumerate(grid_cells):
+        d = grid["DAS-FS"][k]
+        l = grid["LUT"][k]
+        e = grid["ETF"][k]
+        de = de_grid[k]
+        cells += 1
+        if float(d.avg_exec_us) <= min(float(l.avg_exec_us),
+                                       float(e.avg_exec_us)) * 1.02:
+            das_best += 1
+        if ri in LOW_RATES:
+            sp_vs_etf.append(float(e.avg_exec_us) / float(d.avg_exec_us))
+            edp_vs_etf.append(1 - float(de.edp) / float(e.edp))
+        else:
+            sp_vs_lut.append(float(l.avg_exec_us) / float(d.avg_exec_us))
+            edp_vs_lut.append(1 - float(de.edp) / float(l.edp))
     us = time.perf_counter() - t0
     out = {
         "speedup_vs_etf_low": float(np.mean(sp_vs_etf)),

@@ -1,5 +1,8 @@
 """Table II reproduction: classification accuracy + storage for LR and DT
-classifiers vs number of features (our profiles; same methodology)."""
+classifiers vs number of features (our profiles; same methodology).
+
+The training profiles come from `common.dataset()`, i.e. the batched
+two-execution oracle sweep (`oracle.generate` via `sim.run_batch`)."""
 from __future__ import annotations
 
 import time

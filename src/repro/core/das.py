@@ -60,9 +60,13 @@ def train_das(suite: WorkloadSuite,
               rate_indices: Iterable[int] | None = None,
               metric: str = "avg_exec_us",
               feature_ids: Sequence[int] = PAPER_FEATURES,
-              verbose: bool = False) -> DASPolicy:
+              verbose: bool = False,
+              batch_size: int | None = None) -> DASPolicy:
+    """End-to-end DAS training; the oracle pass runs the whole
+    (mix x rate) grid through the batched simulator (`batch_size` chunks
+    the scenario axis, see `oracle.generate`)."""
     params = params or sim.make_params()
     ds = oracle.generate(suite, params, mix_indices=mix_indices,
                          rate_indices=rate_indices, metric=metric,
-                         verbose=verbose)
+                         verbose=verbose, batch_size=batch_size)
     return fit_policy(ds, feature_ids=feature_ids)

@@ -23,6 +23,16 @@ Modes
 
 The whole simulation jits; `simulate` is wrapped in `jax.jit` with the mode
 and capacity constants static.
+
+Batched sweeps
+--------------
+The (workload-mix x data-rate) grids behind the paper's Fig. 2 / Table 2 /
+40-workload summary all run the same jitted loop over same-shape workloads,
+so the scenario axis vmaps: `stack_workloads` (workloads.py) stacks a suite's
+`FlatWorkload`s into a leading axis and `simulate_batch` / `run_batch` map
+`simulate` over it (`SimParams` held constant; `tree` / `rate_threshold`
+optionally per-scenario for DAS / threshold sweeps). Every `SimResult` field
+gains a leading scenario axis; `result_at` slices one scenario back out.
 """
 from __future__ import annotations
 
@@ -52,7 +62,16 @@ MODE_NAMES = {
     MODE_THRESHOLD: "threshold",
 }
 
-R_MAX = 256         # ready-queue capacity (compact buffer)
+# Ready-queue capacity (compact buffer). The queue fully drains before
+# simulated time advances (decisions outrank the advance branch), so depth
+# is bounded by simultaneous task releases, not workload size — measured
+# max is 12 across the 40x14 suite at 60 instances. 16 leaves headroom and
+# keeps the per-decision [R, MP, P] availability tensor small;
+# `ready_drop` counts overflows and the tests assert it stays 0.
+R_MAX = 16
+SEG = 32            # fin_run segment size for the two-level next-completion
+#   search: `fin_seg[k] == fin_run[k*SEG:(k+1)*SEG].min()` is maintained
+#   incrementally, so the hot loop reduces over [T/SEG] instead of [T].
 RING = 8            # data-rate shift register entries (paper: 8x16bit)
 N_FEATURES = 62     # performance-counter feature bank size (paper Table I)
 _INF = jnp.float32(jnp.inf)
@@ -108,21 +127,36 @@ def always_fast_tree() -> DTree:
 
 class SimState(NamedTuple):
     now: jax.Array          # [] f32
+    stalled: jax.Array      # [] bool no event can ever become due again
     sched_free: jax.Array   # [] f32 scheduler-core availability
     arr_ptr: jax.Array      # [] i32 next instance to arrive
     n_done: jax.Array       # [] i32
     n_sched: jax.Array      # [] i32 tasks scheduled so far
     status: jax.Array       # [T] i8 0=waiting 2=ready 3=running 4=done
     pred_rem: jax.Array     # [T] i32
-    ready_base: jax.Array   # [T] f32 availability w/o comm
     start: jax.Array        # [T] f32
     finish: jax.Array       # [T] f32 (inf until scheduled)
+    fin_run: jax.Array      # [Tp] f32 finish while running, else inf.
+    #   Incremental mirror of `where(status == 3, finish, inf)` so the hot
+    #   loop finds the next completion without rebuilding the mask from
+    #   status/finish. Padded to Tp = ceil(T/SEG)*SEG with inf.
+    fin_seg: jax.Array      # [Tp/SEG] f32 per-segment min of fin_run.
+    #   Invariant: fin_seg[k] == fin_run[k*SEG:(k+1)*SEG].min(); updated by
+    #   a scatter-min on assign and a SEG-sized rescan on completion, so
+    #   finding the next completion scans [Tp/SEG] + [SEG], not [T].
+    n_running: jax.Array    # [] i32 count of status==3 tasks
     pe_of: jax.Array        # [T] i32 (-1 until scheduled)
     pe_free: jax.Array      # [P] f32
     pe_busy: jax.Array      # [P] f32 accumulated busy time
     ready_ids: jax.Array    # [R_MAX] i32 FIFO, -1 = empty
     ready_cnt: jax.Array    # [] i32
     ready_drop: jax.Array   # [] i32 overflow counter (should stay 0)
+    ready_avail: jax.Array  # [R_MAX, P] f32 cached availability-with-comm
+    #   rows, computed once at push time (`_avail_rows`): a ready task's
+    #   preds are all finished, so its availability per PE never changes.
+    ready_exec: jax.Array   # [R_MAX, P] f32 cached exec_pe rows.
+    #   Rows at slots >= ready_cnt are stale garbage; every consumer masks
+    #   on `ready_ids >= 0`.
     task_energy: jax.Array  # [] f32 uJ
     sched_energy: jax.Array  # [] f32 uJ
     sched_time: jax.Array   # [] f32 us of scheduler occupancy
@@ -152,6 +186,8 @@ class SimResult(NamedTuple):
     n_slow: jax.Array
     n_done: jax.Array
     ready_drop: jax.Array
+    n_iters: jax.Array         # [] i32 while-loop iterations consumed
+    stalled: jax.Array         # [] bool sim gave up (unschedulable tasks)
     inst_exec_us: jax.Array    # [I] f32 per-instance latency (inf = invalid)
     # oracle / analysis logs
     log_feat: jax.Array
@@ -223,7 +259,7 @@ def _features(p: SimParams, wl: FlatWorkload, s: SimState) -> jax.Array:
             s.arr_count.astype(jnp.float32),
             s.n_done.astype(jnp.float32)
             / jnp.maximum(wl.n_tasks.astype(jnp.float32), 1.0),
-            (s.status == 3).sum().astype(jnp.float32),
+            s.n_running.astype(jnp.float32),
         ]),
     ])
     assert feats.shape == (N_FEATURES,), feats.shape
@@ -247,33 +283,41 @@ FEAT_NAMES = (
 # ---------------------------------------------------------------------------
 # scheduler decision helpers
 # ---------------------------------------------------------------------------
-def _avail_with_comm(p: SimParams, wl: FlatWorkload, s: SimState,
-                     tasks: jax.Array) -> jax.Array:
-    """[R, P] task availability including NoC transfer from pred clusters."""
-    t = jnp.maximum(tasks, 0)                       # [R]
-    preds = wl.preds[t]                             # [R, MP]
+def _avail_rows(p: SimParams, wl: FlatWorkload, s: SimState,
+                tasks: jax.Array, bases: jax.Array) -> jax.Array:
+    """[K, P] availability (incl. NoC transfer from pred clusters).
+
+    Evaluated once per task at push time: a task enters the ready queue
+    only when every predecessor has finished, so pred finish times, pred
+    placements, and hence this whole row are constants from then on. The
+    rows are cached in `SimState.ready_avail` — recomputing the [R, MP, P]
+    tensor at every decision was the single hottest part of the batched
+    sweep loop.
+    """
+    t = jnp.maximum(tasks, 0)                       # [K]
+    preds = wl.preds[t]                             # [K, MP]
     pv = (jnp.arange(preds.shape[1])[None, :] < wl.n_preds[t][:, None])
     pidx = jnp.maximum(preds, 0)
-    pfin = jnp.where(pv, s.finish[pidx], _NEG)      # [R, MP]
+    pfin = jnp.where(pv, s.finish[pidx], _NEG)      # [K, MP]
     pkb = jnp.where(pv, wl.out_kb[pidx], 0.0)
-    pcl = p.pe_cluster[jnp.maximum(s.pe_of[pidx], 0)]          # [R, MP]
-    cross = pcl[:, :, None] != p.pe_cluster[None, None, :]     # [R, MP, P]
+    pcl = p.pe_cluster[jnp.maximum(s.pe_of[pidx], 0)]          # [K, MP]
+    cross = pcl[:, :, None] != p.pe_cluster[None, None, :]     # [K, MP, P]
     contrib = jnp.where(
         pv[:, :, None],
         pfin[:, :, None] + pkb[:, :, None] * p.us_per_kb * cross,
         _NEG,
-    )                                               # [R, MP, P]
-    base = s.ready_base[t][:, None]                 # [R, 1]
-    return jnp.maximum(contrib.max(axis=1), base)   # [R, P]
+    )                                               # [K, MP, P]
+    return jnp.maximum(contrib.max(axis=1), bases[:, None])    # [K, P]
 
 
 def _etf_choice(p: SimParams, wl: FlatWorkload, s: SimState):
-    """Earliest-finish-time (task, pe) over the ready buffer (Algorithm 1)."""
+    """Earliest-finish-time (task, pe) over the ready buffer (Algorithm 1).
+
+    Pure lookup over the cached `ready_avail` / `ready_exec` rows.
+    """
     slot_ok = s.ready_ids >= 0                      # [R]
-    tasks = s.ready_ids
-    avail = _avail_with_comm(p, wl, s, tasks)       # [R, P]
-    exec_t = p.exec_pe[wl.task_type[jnp.maximum(tasks, 0)]]    # [R, P]
-    ft = jnp.maximum(jnp.maximum(avail, s.pe_free[None, :]), s.now) + exec_t
+    ft = jnp.maximum(jnp.maximum(s.ready_avail, s.pe_free[None, :]),
+                     s.now) + s.ready_exec
     ft = jnp.where(slot_ok[:, None], ft, _INF)
     flat = jnp.argmin(ft)
     slot = flat // ft.shape[1]
@@ -294,113 +338,228 @@ def _lut_choice(p: SimParams, wl: FlatWorkload, s: SimState):
 
 # ---------------------------------------------------------------------------
 # state mutations
+#
+# Each mutation takes an optional `active` gate. `active=None` means
+# statically active (the `lax.switch` body, where the branch only runs when
+# chosen). A traced `active` gates every update with `where`, which is how
+# the batched (`masked=True`) body keeps one-event-per-iteration semantics
+# without `lax.switch` — a vmapped switch executes all branches anyway and
+# then pays a select over the whole carry (including the [T, F] logs) per
+# branch per iteration, which dominated the sweep cost.
 # ---------------------------------------------------------------------------
-def _push_ready(s: SimState, task: jax.Array, base: jax.Array,
-                do_push: jax.Array) -> SimState:
-    can = do_push & (s.ready_cnt < R_MAX)
-    idx = jnp.clip(s.ready_cnt, 0, R_MAX - 1)
-    ready_ids = jnp.where(
-        can, s.ready_ids.at[idx].set(task), s.ready_ids
-    )
+def _gate(active, new, old):
+    return new if active is None else jnp.where(active, new, old)
+
+
+def _gate_i(active) -> jax.Array:
+    return jnp.int32(1) if active is None else active.astype(jnp.int32)
+
+
+def _gset(active, arr, idx, val):
+    """Gated row write: `arr[idx] = val` only when `active`.
+
+    Inactive writes are redirected to an out-of-bounds row that
+    `mode="drop"` discards, so the whole thing stays a one-row scatter
+    XLA can apply in place on the loop carry. The alternative,
+    `jnp.where(active, arr.at[idx].set(val), arr)`, materializes a
+    full-array select per call — ruinous for the [T, F] decision log
+    inside the batched while loop.
+    """
+    if active is None:
+        return arr.at[idx].set(val)
+    oob = jnp.where(active, idx, arr.shape[0])
+    return arr.at[oob].set(val, mode="drop")
+
+
+def _gadd(active, arr, idx, val):
+    """Gated `arr[idx] += val` (same out-of-bounds trick as `_gset`)."""
+    if active is None:
+        return arr.at[idx].add(val)
+    oob = jnp.where(active, idx, arr.shape[0])
+    return arr.at[oob].add(val, mode="drop")
+
+
+def _gmin(active, arr, idx, val):
+    """Gated `arr[idx] = min(arr[idx], val)` (same trick as `_gset`)."""
+    if active is None:
+        return arr.at[idx].min(val)
+    oob = jnp.where(active, idx, arr.shape[0])
+    return arr.at[oob].min(val, mode="drop")
+
+
+def _next_completion(s: SimState):
+    """(task, finish) of the earliest-finishing running task.
+
+    Two-level search over the `fin_seg` invariant; the returned index is
+    exactly `argmin(fin_run)` (first global minimum: the first segment
+    holding the min value wins, then the first index inside it).
+    """
+    seg = jnp.argmin(s.fin_seg)
+    blk = jax.lax.dynamic_slice(s.fin_run, (seg * SEG,), (SEG,))
+    t = (seg * SEG + jnp.argmin(blk)).astype(jnp.int32)
+    return t, s.fin_seg[seg]
+
+
+def _push_ready_many(p: SimParams, wl: FlatWorkload, s: SimState,
+                     tasks: jax.Array, bases: jax.Array,
+                     do_push: jax.Array, rows_avail=None) -> SimState:
+    """FIFO-push up to K tasks (k ascending), caching their [P] rows.
+
+    Replicates K sequential single-task pushes exactly. Slot assignment:
+    with `b_k = ready_cnt + sum_{j<k} do_push_j`, push k lands iff
+    `do_push_k & (b_k < R_MAX)` — before the queue saturates every
+    accepted push *is* a do_push, so the do_push cumsum equals the
+    accepted cumsum, and after saturation both reject everything.
+    `rows_avail` lets a caller that knows the availability rows in closed
+    form (arrival roots) skip the `_avail_rows` tensor.
+    """
+    t = jnp.maximum(tasks, 0)                             # [K]
+    if rows_avail is None:
+        rows_avail = _avail_rows(p, wl, s, t, bases)      # [K, P]
+    rows_exec = p.exec_pe[wl.task_type[t]]                # [K, P]
+    want = do_push.astype(jnp.int32)
+    before = s.ready_cnt + jnp.cumsum(want) - want        # [K] exclusive
+    can = do_push & (before < R_MAX)
+    acc = can.astype(jnp.int32)
+    slots = s.ready_cnt + jnp.cumsum(acc) - acc           # [K]
+    sl = jnp.where(can, slots, R_MAX)                     # drop rejected
+    tix = jnp.where(do_push, t, s.status.shape[0])
     return s._replace(
-        ready_ids=ready_ids,
-        ready_cnt=s.ready_cnt + can.astype(jnp.int32),
-        ready_drop=s.ready_drop + (do_push & ~can).astype(jnp.int32),
-        status=jnp.where(do_push, s.status.at[task].set(2), s.status),
-        ready_base=jnp.where(
-            do_push, s.ready_base.at[task].set(base), s.ready_base
-        ),
+        ready_ids=s.ready_ids.at[sl].set(t, mode="drop"),
+        ready_avail=s.ready_avail.at[sl].set(rows_avail, mode="drop"),
+        ready_exec=s.ready_exec.at[sl].set(rows_exec, mode="drop"),
+        ready_cnt=s.ready_cnt + acc.sum(),
+        ready_drop=s.ready_drop + (want - acc).sum(),
+        status=s.status.at[tix].set(2, mode="drop"),
     )
 
 
-def _pop_slot(s: SimState, slot: jax.Array) -> SimState:
+def _pop_slot(s: SimState, slot: jax.Array, active=None) -> SimState:
     """Remove `slot` keeping FIFO order (left shift of the tail)."""
     ar = jnp.arange(R_MAX)
+    tail = ar >= slot
     shifted = jnp.roll(s.ready_ids, -1)
-    ready_ids = jnp.where(ar >= slot, shifted, s.ready_ids)
+    ready_ids = jnp.where(tail, shifted, s.ready_ids)
     ready_ids = ready_ids.at[R_MAX - 1].set(
         jnp.where(slot < R_MAX, -1, ready_ids[R_MAX - 1])
     )
-    return s._replace(ready_ids=ready_ids, ready_cnt=s.ready_cnt - 1)
+
+    # cached rows shift with the ids; the duplicated last row is stale but
+    # its ready_id is -1, so it is masked everywhere
+    def shift_rows(a):
+        return jnp.where(tail[:, None], jnp.roll(a, -1, axis=0), a)
+
+    return s._replace(
+        ready_ids=_gate(active, ready_ids, s.ready_ids),
+        ready_avail=_gate(active, shift_rows(s.ready_avail), s.ready_avail),
+        ready_exec=_gate(active, shift_rows(s.ready_exec), s.ready_exec),
+        ready_cnt=s.ready_cnt - _gate_i(active))
 
 
 def _assign(p: SimParams, wl: FlatWorkload, s: SimState, slot: jax.Array,
             pe: jax.Array, lat: jax.Array, sched_e: jax.Array,
             is_slow: jax.Array, feats: jax.Array,
-            agree: jax.Array) -> SimState:
+            agree: jax.Array, active=None) -> SimState:
     task = jnp.maximum(s.ready_ids[slot], 0)
     sched_done = jnp.maximum(s.sched_free, s.now) + lat
-    avail = _avail_with_comm(p, wl, s, s.ready_ids)[slot, pe]
+    avail = s.ready_avail[slot, pe]
     start = jnp.maximum(jnp.maximum(avail, s.pe_free[pe]),
                         jnp.maximum(sched_done, s.now))
-    exec_t = p.exec_pe[wl.task_type[task], pe]
+    exec_t = s.ready_exec[slot, pe]
     finish = start + exec_t
     e_task = exec_t * p.pe_power[pe]
+    act = _gate_i(active)
     d = s.d_ptr
+    # accumulators: gate the summed result, not the addend — selecting the
+    # addend to 0.0 blocks the mul+add FMA contraction the unmasked path
+    # gets, and the two paths then drift by a ULP per decision
     s = s._replace(
-        sched_free=sched_done,
-        status=s.status.at[task].set(3),
-        start=s.start.at[task].set(start),
-        finish=s.finish.at[task].set(finish),
-        pe_of=s.pe_of.at[task].set(pe),
-        pe_free=s.pe_free.at[pe].set(finish),
-        pe_busy=s.pe_busy.at[pe].add(exec_t),
-        task_energy=s.task_energy + e_task,
-        sched_energy=s.sched_energy + sched_e,
-        sched_time=s.sched_time + lat,
-        n_fast=s.n_fast + (1 - is_slow),
-        n_slow=s.n_slow + is_slow,
-        n_sched=s.n_sched + 1,
-        d_ptr=d + 1,
-        log_feat=s.log_feat.at[d].set(feats),
-        log_policy=s.log_policy.at[d].set(is_slow.astype(jnp.int8)),
-        log_agree=s.log_agree.at[d].set(agree.astype(jnp.int8)),
-        log_task=s.log_task.at[d].set(task),
+        sched_free=_gate(active, sched_done, s.sched_free),
+        status=_gset(active, s.status, task, 3),
+        start=_gset(active, s.start, task, start),
+        finish=_gset(active, s.finish, task, finish),
+        fin_run=_gset(active, s.fin_run, task, finish),
+        fin_seg=_gmin(active, s.fin_seg, task // SEG, finish),
+        n_running=s.n_running + act,
+        pe_of=_gset(active, s.pe_of, task, pe),
+        pe_free=_gset(active, s.pe_free, pe, finish),
+        pe_busy=_gadd(active, s.pe_busy, pe, exec_t),
+        task_energy=_gate(active, s.task_energy + e_task, s.task_energy),
+        sched_energy=_gate(active, s.sched_energy + sched_e, s.sched_energy),
+        sched_time=_gate(active, s.sched_time + lat, s.sched_time),
+        n_fast=s.n_fast + (1 - is_slow) * act,
+        n_slow=s.n_slow + is_slow * act,
+        n_sched=s.n_sched + act,
+        d_ptr=d + act,
+        log_feat=_gset(active, s.log_feat, d, feats),
+        log_policy=_gset(active, s.log_policy, d, is_slow.astype(jnp.int8)),
+        log_agree=_gset(active, s.log_agree, d, agree.astype(jnp.int8)),
+        log_task=_gset(active, s.log_task, d, task),
     )
-    return _pop_slot(s, slot)
+    return _pop_slot(s, slot, active=active)
 
 
 def _process_completion(p: SimParams, wl: FlatWorkload,
-                        s: SimState) -> SimState:
-    due = (s.status == 3) & (s.finish <= s.now)
-    t = jnp.argmin(jnp.where(due, s.finish, _INF)).astype(jnp.int32)
-    s = s._replace(status=s.status.at[t].set(4), n_done=s.n_done + 1)
+                        s: SimState, active=None, t=None) -> SimState:
+    if t is None:
+        # earliest-finishing running task; when a completion is due, every
+        # task at the minimum of `fin_run` has finish <= now, so this is
+        # exactly argmin(where(status==3 & finish<=now, finish, inf))
+        t, _ = _next_completion(s)
+    act = _gate_i(active)
+    s = s._replace(status=_gset(active, s.status, t, 4),
+                   fin_run=_gset(active, s.fin_run, t, _INF),
+                   n_running=s.n_running - act,
+                   n_done=s.n_done + act)
+    # restore the fin_seg invariant: rescan only the SEG-sized block of
+    # the retired task (reads the post-scatter fin_run)
+    seg = t // SEG
+    blk = jax.lax.dynamic_slice(s.fin_run, (seg * SEG,), (SEG,))
+    s = s._replace(fin_seg=_gset(active, s.fin_seg, seg, blk.min()))
 
-    def body(k, st):
-        succ = wl.succs[t, k]
-        valid = (k < wl.n_succs[t]) & (succ >= 0)
-        sc = jnp.maximum(succ, 0)
-        new_rem = st.pred_rem[sc] - 1
-        pred_rem = jnp.where(
-            valid, st.pred_rem.at[sc].set(new_rem), st.pred_rem
-        )
-        st = st._replace(pred_rem=pred_rem)
-        ready_now = valid & (new_rem == 0)
-        # availability (base) = max pred finish (all preds are done)
-        pr = wl.preds[sc]
-        pv = jnp.arange(pr.shape[0]) < wl.n_preds[sc]
-        base = jnp.where(pv, st.finish[jnp.maximum(pr, 0)], _NEG).max()
-        return _push_ready(st, sc, jnp.maximum(base, st.now), ready_now)
+    # all successors at once: they are distinct tasks, so the pred_rem
+    # update and the pushes vectorize with no read-after-write hazard
+    succ = wl.succs[t]                                    # [MS]
+    valid = (jnp.arange(succ.shape[0]) < wl.n_succs[t]) & (succ >= 0)
+    if active is not None:
+        valid &= active
+    sc = jnp.maximum(succ, 0)
+    new_rem = s.pred_rem[sc] - 1
+    scx = jnp.where(valid, sc, s.pred_rem.shape[0])
+    s = s._replace(pred_rem=s.pred_rem.at[scx].set(new_rem, mode="drop"))
+    ready_now = valid & (new_rem == 0)
+    # availability (base) = max pred finish (all preds are done)
+    pr = wl.preds[sc]                                     # [MS, MP]
+    pv = jnp.arange(pr.shape[1])[None, :] < wl.n_preds[sc][:, None]
+    bases = jnp.where(pv, s.finish[jnp.maximum(pr, 0)], _NEG).max(axis=1)
+    return _push_ready_many(p, wl, s, sc, jnp.maximum(bases, s.now),
+                            ready_now)
 
-    return jax.lax.fori_loop(0, wl.succs.shape[1], body, s)
 
-
-def _process_arrival(wl: FlatWorkload, s: SimState) -> SimState:
+def _process_arrival(p: SimParams, wl: FlatWorkload, s: SimState,
+                     active=None) -> SimState:
     i = s.arr_ptr
-    t_arr = wl.inst_arrival[i]
+    ic = jnp.minimum(i, wl.inst_arrival.shape[0] - 1)
+    t_arr = wl.inst_arrival[ic]
+    act = _gate_i(active)
     s = s._replace(
-        arr_ptr=i + 1,
-        ring=s.ring.at[s.ring_ptr % RING].set(t_arr),
-        ring_ptr=s.ring_ptr + 1,
-        arr_count=s.arr_count + 1,
+        arr_ptr=i + act,
+        ring=_gset(active, s.ring, s.ring_ptr % RING, t_arr),
+        ring_ptr=s.ring_ptr + act,
+        arr_count=s.arr_count + act,
     )
-
-    def body(k, st):
-        r = wl.inst_roots[i, k]
-        valid = (k < wl.inst_n_roots[i]) & (r >= 0)
-        return _push_ready(st, jnp.maximum(r, 0), t_arr, valid)
-
-    return jax.lax.fori_loop(0, wl.inst_roots.shape[1], body, s)
+    roots = wl.inst_roots[ic]                             # [MR]
+    valid = (jnp.arange(roots.shape[0]) < wl.inst_n_roots[ic]) & (roots >= 0)
+    if active is not None:
+        valid &= active
+    bases = jnp.full(roots.shape[0], t_arr)
+    # roots have zero preds by construction, so their availability row is
+    # exactly the arrival time on every PE (`_avail_rows` would reduce an
+    # all -inf contrib tensor against `bases`)
+    rows = jnp.broadcast_to(bases[:, None],
+                            (roots.shape[0], s.pe_free.shape[0]))
+    return _push_ready_many(p, wl, s, jnp.maximum(roots, 0), bases, valid,
+                            rows_avail=rows)
 
 
 # ---------------------------------------------------------------------------
@@ -408,18 +567,23 @@ def _process_arrival(wl: FlatWorkload, s: SimState) -> SimState:
 # ---------------------------------------------------------------------------
 def _init_state(wl: FlatWorkload, n_pes: int) -> SimState:
     T = wl.task_type.shape[0]
+    Tp = -(-T // SEG) * SEG       # fin_run padded so every segment is full
     return SimState(
-        now=jnp.float32(0.0), sched_free=jnp.float32(0.0),
+        now=jnp.float32(0.0), stalled=jnp.array(False),
+        sched_free=jnp.float32(0.0),
         arr_ptr=jnp.int32(0), n_done=jnp.int32(0), n_sched=jnp.int32(0),
         status=jnp.zeros(T, jnp.int8),
         pred_rem=wl.n_preds.astype(jnp.int32),
-        ready_base=jnp.zeros(T, jnp.float32),
         start=jnp.full(T, _INF), finish=jnp.full(T, _INF),
+        fin_run=jnp.full(Tp, _INF),
+        fin_seg=jnp.full(Tp // SEG, _INF), n_running=jnp.int32(0),
         pe_of=jnp.full(T, -1, jnp.int32),
         pe_free=jnp.zeros(n_pes, jnp.float32),
         pe_busy=jnp.zeros(n_pes, jnp.float32),
         ready_ids=jnp.full(R_MAX, -1, jnp.int32),
         ready_cnt=jnp.int32(0), ready_drop=jnp.int32(0),
+        ready_avail=jnp.zeros((R_MAX, n_pes), jnp.float32),
+        ready_exec=jnp.zeros((R_MAX, n_pes), jnp.float32),
         task_energy=jnp.float32(0.0), sched_energy=jnp.float32(0.0),
         sched_time=jnp.float32(0.0),
         n_fast=jnp.int32(0), n_slow=jnp.int32(0),
@@ -434,7 +598,8 @@ def _init_state(wl: FlatWorkload, n_pes: int) -> SimState:
 
 
 def _decide(mode: int, p: SimParams, wl: FlatWorkload, s: SimState,
-            tree: DTree, rate_threshold: jax.Array) -> SimState:
+            tree: DTree, rate_threshold: jax.Array,
+            active=None) -> SimState:
     feats = _features(p, wl, s)
     n = s.ready_cnt.astype(jnp.float32)
     etf_lat = soc.etf_latency_us(n)
@@ -444,15 +609,15 @@ def _decide(mode: int, p: SimParams, wl: FlatWorkload, s: SimState,
         slot, pe = _lut_choice(p, wl, s)
         return _assign(p, wl, s, slot, pe, jnp.float32(soc.LUT_LATENCY_US),
                        jnp.float32(soc.LUT_ENERGY_UJ), jnp.int32(0), feats,
-                       jnp.int32(0))
+                       jnp.int32(0), active=active)
     if mode == MODE_ETF:
         slot, pe = _etf_choice(p, wl, s)
         return _assign(p, wl, s, slot, pe, etf_lat, etf_e, jnp.int32(1),
-                       feats, jnp.int32(0))
+                       feats, jnp.int32(0), active=active)
     if mode == MODE_ETF_IDEAL:
         slot, pe = _etf_choice(p, wl, s)
         return _assign(p, wl, s, slot, pe, jnp.float32(0.0), jnp.float32(0.0),
-                       jnp.int32(1), feats, jnp.int32(0))
+                       jnp.int32(1), feats, jnp.int32(0), active=active)
     if mode == MODE_ORACLE:
         # run both, follow the fast one, log whether they agree
         slot_f, pe_f = _lut_choice(p, wl, s)
@@ -462,7 +627,7 @@ def _decide(mode: int, p: SimParams, wl: FlatWorkload, s: SimState,
         return _assign(p, wl, s, slot_f, pe_f,
                        jnp.float32(soc.LUT_LATENCY_US),
                        jnp.float32(soc.LUT_ENERGY_UJ), jnp.int32(0), feats,
-                       agree)
+                       agree, active=active)
 
     if mode == MODE_DAS:
         use_slow = tree.predict(feats).astype(bool)
@@ -480,61 +645,81 @@ def _decide(mode: int, p: SimParams, wl: FlatWorkload, s: SimState,
     lat = jnp.where(use_slow, etf_lat, jnp.float32(soc.LUT_LATENCY_US))
     e = jnp.where(use_slow, etf_e, jnp.float32(soc.LUT_ENERGY_UJ)) + cls_e
     return _assign(p, wl, s, slot, pe, lat, e, use_slow.astype(jnp.int32),
-                   feats, jnp.int32(0))
+                   feats, jnp.int32(0), active=active)
 
 
-@functools.partial(jax.jit, static_argnums=(0,))
-def simulate(mode: int, params: SimParams, wl: FlatWorkload,
-             tree: DTree, rate_threshold: jax.Array) -> SimResult:
-    T = wl.task_type.shape[0]
+def _masked_step(mode: int, params: SimParams, s: SimState,
+                 wl: FlatWorkload, tree: DTree, rate_threshold: jax.Array,
+                 run: jax.Array):
+    """One super-step of gated phases (no `lax.switch`); returns (s, ev).
+
+    Phases run in the sequential body's priority order (completion >
+    arrival > decide > advance), but gates are *re-derived after each
+    phase*, so one iteration retires several consecutive events whenever
+    they would have fired back-to-back anyway — e.g. the last completion
+    at a timestamp, then the arrival due at that timestamp, then the first
+    scheduling decision. The retired event *sequence* is exactly the
+    switch path's, hence every result field stays bit-identical; only the
+    grouping into loop iterations changes, which `ev` (events retired this
+    step, 0..4) accounts for so `n_iters` still equals the sequential
+    count. `run=False` makes the whole step a no-op, which is how the
+    batched driver freezes finished lanes. Used under vmap: a vmapped
+    switch would execute all branches anyway and then select the *entire*
+    carry once per branch, which dominated the sweep cost.
+    """
     I = wl.inst_arrival.shape[0]
-    n_pes = params.pe_cluster.shape[0]
-    max_iters = 3 * T + I + 64
+    # one two-level search serves completion detection, the completed task
+    # index, AND the advance target (the switch path derives all three
+    # from status/finish separately — same values, more passes)
+    fin_idx, fin_val = _next_completion(s)
+    c = run & (fin_val <= s.now)
+    s = _process_completion(params, wl, s, active=c, t=fin_idx)
 
-    def cond(carry):
-        s, it = carry
-        return (s.n_done < wl.n_tasks) & (it < max_iters)
+    # a completion tie leaves another completion due: everything below
+    # must wait for the next iteration then, exactly as the switch would
+    next_fin = s.fin_seg.min()
+    no_c = ~(next_fin <= s.now)
 
-    def body(carry):
-        s, it = carry
-        completion_due = jnp.any((s.status == 3) & (s.finish <= s.now))
-        arrival_due = (s.arr_ptr < wl.n_insts) & (
-            wl.inst_arrival[jnp.minimum(s.arr_ptr, I - 1)] <= s.now
+    def arr_due(st):
+        return (st.arr_ptr < wl.n_insts) & (
+            wl.inst_arrival[jnp.minimum(st.arr_ptr, I - 1)] <= st.now
         )
-        can_decide = s.ready_cnt > 0
 
-        def do_completion(st):
-            return _process_completion(params, wl, st)
+    a = run & no_c & arr_due(s)
+    s = _process_arrival(params, wl, s, active=a)
 
-        def do_arrival(st):
-            return _process_arrival(wl, st)
+    # same-timestamp arrivals: the next one blocks the decide phase
+    no_a = ~arr_due(s)
+    can_decide = s.ready_cnt > 0
+    d = run & no_c & no_a & can_decide
+    s = _decide(mode, params, wl, s, tree, rate_threshold, active=d)
 
-        def do_decide(st):
-            return _decide(mode, params, wl, st, tree, rate_threshold)
+    # advance when nothing else can fire *after* this trip's phases: a
+    # decide leaves finish > now (exec times are positive), so no
+    # completion becomes due mid-trip, but it can lower the next finish —
+    # recompute the min. Queue emptiness is post-decide. After the final
+    # completion the sequential cond exits without reaching do_advance,
+    # hence the n_done guard.
+    next_fin = jnp.where(d, s.fin_seg.min(), next_fin)
+    adv = run & no_c & no_a & (s.ready_cnt == 0) & (s.n_done < wl.n_tasks)
+    next_arr = jnp.where(
+        s.arr_ptr < wl.n_insts,
+        wl.inst_arrival[jnp.minimum(s.arr_ptr, I - 1)], _INF,
+    )
+    nxt = jnp.minimum(next_fin, next_arr)
+    stuck = ~jnp.isfinite(nxt)
+    nxt = jnp.where(stuck, s.now, nxt)
+    s = s._replace(
+        now=jnp.where(adv, jnp.maximum(nxt, s.now), s.now),
+        stalled=s.stalled | (adv & stuck),
+    )
+    ev = (c.astype(jnp.int32) + a.astype(jnp.int32)
+          + d.astype(jnp.int32) + adv.astype(jnp.int32))
+    return s, ev
 
-        def do_advance(st):
-            next_fin = jnp.where(st.status == 3, st.finish, _INF).min()
-            next_arr = jnp.where(
-                st.arr_ptr < wl.n_insts,
-                wl.inst_arrival[jnp.minimum(st.arr_ptr, I - 1)], _INF,
-            )
-            nxt = jnp.minimum(next_fin, next_arr)
-            # deadlock guard: if nothing is pending, jump past the horizon
-            nxt = jnp.where(jnp.isfinite(nxt), nxt, st.now)
-            return st._replace(now=jnp.maximum(nxt, st.now))
 
-        branch = jnp.where(
-            completion_due, 0,
-            jnp.where(arrival_due, 1, jnp.where(can_decide, 2, 3)),
-        )
-        s = jax.lax.switch(
-            branch, [do_completion, do_arrival, do_decide, do_advance], s
-        )
-        return (s, it + 1)
-
-    s0 = _init_state(wl, n_pes)
-    s, iters = jax.lax.while_loop(cond, body, (s0, jnp.int32(0)))
-
+def _finalize(wl: FlatWorkload, s: SimState, iters: jax.Array) -> SimResult:
+    I = wl.inst_arrival.shape[0]
     # per-instance latency: segment-max of finish over each instance's tasks
     inst_fin = jnp.full(I, _NEG).at[wl.inst_id].max(
         jnp.where(wl.task_valid, s.finish, _NEG)
@@ -558,6 +743,8 @@ def simulate(mode: int, params: SimParams, wl: FlatWorkload,
         n_slow=s.n_slow,
         n_done=s.n_done,
         ready_drop=s.ready_drop,
+        n_iters=iters,
+        stalled=s.stalled,
         inst_exec_us=inst_exec,
         log_feat=s.log_feat,
         log_policy=s.log_policy,
@@ -568,8 +755,139 @@ def simulate(mode: int, params: SimParams, wl: FlatWorkload,
     )
 
 
+def _simulate_impl(mode: int, params: SimParams, wl: FlatWorkload,
+                   tree: DTree, rate_threshold: jax.Array) -> SimResult:
+    T = wl.task_type.shape[0]
+    I = wl.inst_arrival.shape[0]
+    n_pes = params.pe_cluster.shape[0]
+    max_iters = 3 * T + I + 64
+
+    def cond(carry):
+        s, it = carry
+        return (s.n_done < wl.n_tasks) & ~s.stalled & (it < max_iters)
+
+    def body(carry):
+        s, it = carry
+        completion_due = s.fin_seg.min() <= s.now
+        arrival_due = (s.arr_ptr < wl.n_insts) & (
+            wl.inst_arrival[jnp.minimum(s.arr_ptr, I - 1)] <= s.now
+        )
+        can_decide = s.ready_cnt > 0
+
+        def do_completion(st):
+            return _process_completion(params, wl, st)
+
+        def do_arrival(st):
+            return _process_arrival(params, wl, st)
+
+        def do_decide(st):
+            return _decide(mode, params, wl, st, tree, rate_threshold)
+
+        def do_advance(st):
+            next_fin = st.fin_seg.min()
+            next_arr = jnp.where(
+                st.arr_ptr < wl.n_insts,
+                wl.inst_arrival[jnp.minimum(st.arr_ptr, I - 1)], _INF,
+            )
+            nxt = jnp.minimum(next_fin, next_arr)
+            # deadlock guard: nothing running and nothing left to arrive
+            # means no event can ever become due again (unschedulable
+            # tasks) — flag the stall so `cond` exits instead of spinning
+            # here until `max_iters`.
+            stuck = ~jnp.isfinite(nxt)
+            nxt = jnp.where(stuck, st.now, nxt)
+            return st._replace(now=jnp.maximum(nxt, st.now), stalled=stuck)
+
+        branch = jnp.where(
+            completion_due, 0,
+            jnp.where(arrival_due, 1, jnp.where(can_decide, 2, 3)),
+        )
+        s = jax.lax.switch(
+            branch, [do_completion, do_arrival, do_decide, do_advance], s
+        )
+        return (s, it + 1)
+
+    s0 = _init_state(wl, n_pes)
+    s, iters = jax.lax.while_loop(cond, body, (s0, jnp.int32(0)))
+    return _finalize(wl, s, iters)
+
+
+# `mode` is static (each mode compiles its own loop); everything else is
+# traced. Returns a `SimResult` of scalars plus per-task/per-decision logs.
+# The single-scenario path keeps the `lax.switch` body: unbatched, a switch
+# runs only the taken branch, which beats the masked step's always-on phases.
+simulate = jax.jit(_simulate_impl, static_argnums=(0,))
+
+
+@functools.partial(jax.jit, static_argnums=(0, 5, 6))
+def _simulate_batch(mode, params, wls, tree, rate_threshold,
+                    tree_axis, thr_axis):
+    # One while loop over explicitly-batched state, vmapping only the
+    # per-iteration step. Deliberately NOT `vmap(_simulate_impl)`: batching
+    # a `while_loop` makes its cond per-lane, and the batching rule then
+    # rewrites the body to `select(cond, body(carry), carry)` — a select
+    # over the entire carry (including the [T, F] decision log) every
+    # iteration. Here cond stays scalar (`any(running)`), finished lanes
+    # are frozen by the step's `run` gate instead, and all per-lane writes
+    # remain one-row scatters XLA applies in place.
+    S, T = wls.task_type.shape
+    I = wls.inst_arrival.shape[1]
+    n_pes = params.pe_cluster.shape[0]
+    max_iters = 3 * T + I + 64
+
+    step = jax.vmap(
+        functools.partial(_masked_step, mode, params),
+        in_axes=(0, 0, tree_axis, thr_axis, 0),
+    )
+
+    def running(s, it):
+        return (s.n_done < wls.n_tasks) & ~s.stalled & (it < max_iters)
+
+    def cond(carry):
+        s, it = carry
+        return jnp.any(running(s, it))
+
+    def body(carry):
+        s, it = carry
+        run = running(s, it)
+        s, ev = step(s, wls, tree, rate_threshold, run)
+        # it counts retired *events*, matching the sequential n_iters
+        # (a super-step can retire up to 4). A lane within 3 of max_iters
+        # may overshoot the cap by a couple of events; max_iters is a
+        # pathology backstop, so the slack is irrelevant in practice.
+        return (s, it + ev)
+
+    s0 = jax.vmap(_init_state, in_axes=(0, None))(wls, n_pes)
+    s, iters = jax.lax.while_loop(cond, body,
+                                  (s0, jnp.zeros(S, jnp.int32)))
+    return jax.vmap(_finalize)(wls, s, iters)
+
+
+def simulate_batch(mode: int, params: SimParams, wls: FlatWorkload,
+                   tree: DTree, rate_threshold: jax.Array) -> SimResult:
+    """`jax.vmap` of `simulate` over a leading scenario axis.
+
+    `wls` is a stacked workload (`workloads.stack_workloads`): every field
+    carries a leading `[S]` axis. `params` and `mode` are shared across
+    scenarios. `tree` and `rate_threshold` are broadcast when unbatched, or
+    swept per-scenario when given a leading `[S]` axis (threshold sweeps,
+    per-scenario DAS trees). Returns a `SimResult` whose every field has a
+    leading `[S]` axis; scenario results are bit-identical to running
+    `simulate` one scenario at a time on CPU.
+    """
+    tree_axis = 0 if tree.feat.ndim == 2 else None
+    thr_axis = 0 if getattr(rate_threshold, "ndim", 0) >= 1 else None
+    return _simulate_batch(mode, params, wls, tree, rate_threshold,
+                           tree_axis, thr_axis)
+
+
 def to_device(wl: FlatWorkload) -> FlatWorkload:
     return FlatWorkload(*[jnp.asarray(x) for x in wl])
+
+
+def result_at(res: SimResult, i: int) -> SimResult:
+    """Slice scenario `i` out of a batched `SimResult`."""
+    return jax.tree_util.tree_map(lambda x: x[i], res)
 
 
 def run(mode: int, wl: FlatWorkload, params: SimParams | None = None,
@@ -580,3 +898,48 @@ def run(mode: int, wl: FlatWorkload, params: SimParams | None = None,
     tree = tree or always_fast_tree()
     return simulate(mode, params, to_device(wl), tree,
                     jnp.float32(rate_threshold))
+
+
+def run_batch(mode: int, wls, params: SimParams | None = None,
+              tree: DTree | None = None,
+              rate_threshold=1e9,
+              batch_size: int | None = None) -> SimResult:
+    """Batched convenience wrapper over a scenario axis.
+
+    `wls` is either a list of same-shape `FlatWorkload`s or an
+    already-stacked workload (leading `[S]` axis on every field).
+    `batch_size` chunks the scenario axis (sequential vmapped chunks) so
+    peak memory stays bounded on large sweeps — benchmarks wire it to the
+    `REPRO_BENCH_BATCH` env knob. `tree` / `rate_threshold` may carry a
+    leading `[S]` axis to vary per scenario; chunking slices them along
+    with the workloads. Results are independent of `batch_size`.
+    """
+    from repro.core.workloads import stack_workloads
+
+    if batch_size is not None and batch_size <= 0:
+        raise ValueError(f"batch_size must be positive, got {batch_size}")
+    params = params or make_params()
+    tree = tree or always_fast_tree()
+    if isinstance(wls, FlatWorkload):
+        stacked = wls
+    else:
+        stacked = stack_workloads(wls)
+    stacked = to_device(stacked)
+    n = stacked.task_type.shape[0]
+    if not isinstance(rate_threshold, jax.Array):
+        rate_threshold = jnp.float32(rate_threshold)
+    if batch_size is None or batch_size >= n:
+        return simulate_batch(mode, params, stacked, tree, rate_threshold)
+
+    tree_b = tree.feat.ndim == 2
+    thr_b = rate_threshold.ndim >= 1
+    chunks = []
+    for lo in range(0, n, batch_size):
+        hi = min(lo + batch_size, n)
+        part = jax.tree_util.tree_map(lambda x: x[lo:hi], stacked)
+        t = jax.tree_util.tree_map(lambda x: x[lo:hi], tree) if tree_b \
+            else tree
+        rt = rate_threshold[lo:hi] if thr_b else rate_threshold
+        chunks.append(simulate_batch(mode, params, part, t, rt))
+    return jax.tree_util.tree_map(
+        lambda *xs: jnp.concatenate(xs, axis=0), *chunks)

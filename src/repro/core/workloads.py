@@ -193,6 +193,30 @@ def build_workload(
     )
 
 
+def stack_workloads(wls: Sequence[FlatWorkload]) -> FlatWorkload:
+    """Stack same-shape workloads into a leading scenario axis.
+
+    Every field of the result carries a leading `[S]` axis (scalars such as
+    `n_tasks` become `[S]` vectors). Workloads built from one
+    `WorkloadSuite` share padded shapes by construction, so a (mix x rate)
+    sweep stacks directly; the result feeds `simulator.simulate_batch` /
+    `run_batch`, which `jax.vmap` the jitted simulator over the axis.
+    """
+    if not wls:
+        raise ValueError("stack_workloads: need at least one workload")
+    for wl in wls[1:]:
+        for a, b, name in zip(wl, wls[0], FlatWorkload._fields):
+            if np.shape(a) != np.shape(b):
+                raise ValueError(
+                    f"stack_workloads: field {name!r} shape mismatch "
+                    f"{np.shape(a)} vs {np.shape(b)}; build all scenarios "
+                    "from one suite (shared t_max/i_max)")
+    return FlatWorkload(*[
+        np.stack([np.asarray(f) for f in fields])
+        for fields in zip(*wls)
+    ])
+
+
 @dataclasses.dataclass(frozen=True)
 class WorkloadSuite:
     """The benchmark suite: mixes x rates, shared padded shapes."""
@@ -208,6 +232,12 @@ class WorkloadSuite:
             self.mixes[mix_idx], float(self.rates[rate_idx]),
             self.n_instances, seed=seed + 1000 * mix_idx + rate_idx,
             t_max=self.t_max, i_max=self.i_max,
+        )
+
+    def build_many(self, cells: Sequence[tuple], seed: int = 0) -> FlatWorkload:
+        """Build and stack the scenarios `[(mix_idx, rate_idx), ...]`."""
+        return stack_workloads(
+            [self.build(mi, ri, seed=seed) for mi, ri in cells]
         )
 
 

@@ -1,0 +1,47 @@
+"""Optional-`hypothesis` shim for the test suite.
+
+The seed state hard-imported `hypothesis` at the top of three test modules,
+so `python -m pytest -x -q` died with collection ImportErrors on minimal
+environments. Importing `hypothesis`/`st` from here instead keeps every
+unit test collectable and running; only the property tests degrade — to a
+clean per-test skip — when the package is missing.
+"""
+import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategies:
+        """Stand-in for `hypothesis.strategies`: any strategy builds None."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    class _Hypothesis:
+        """Stand-in decorators: `@given` turns the test into a skip."""
+
+        @staticmethod
+        def settings(*a, **k):
+            return lambda fn: fn
+
+        @staticmethod
+        def given(*a, **k):
+            def deco(fn):
+                def skipper():
+                    pytest.skip("hypothesis not installed")
+
+                # keep the collected test name; no __wrapped__ so pytest
+                # sees the zero-arg signature, not the original's params
+                skipper.__name__ = fn.__name__
+                skipper.__doc__ = fn.__doc__
+                return skipper
+
+            return deco
+
+    hypothesis = _Hypothesis()
+    st = _Strategies()

@@ -1,10 +1,9 @@
 """Classifier zoo tests: DT/LR correctness, feature selection, DTree
 lowering to the simulator's fixed arrays."""
-import hypothesis
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 
+from hyp_compat import hypothesis, st
 from repro.core import classifier as clf
 from repro.core.simulator import DTree
 

@@ -1,10 +1,9 @@
-"""DAS core simulator: unit + property tests (hypothesis)."""
-import hypothesis
-import hypothesis.strategies as st
+"""DAS core simulator: unit + property tests (hypothesis optional)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from hyp_compat import hypothesis, st
 from repro.core import dfg, oracle, simulator as sim, soc, workloads
 
 PARAMS = sim.make_params()

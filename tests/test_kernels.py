@@ -1,12 +1,11 @@
 """Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles,
 interpret mode (deliverable c)."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from hyp_compat import hypothesis, st
 from repro.kernels.etf_ft import kernel as etfk, ref as etfr
 from repro.kernels.flash_attention import kernel as fak, ref as far
 from repro.kernels.rg_lru import kernel as rgk, ref as rgr
