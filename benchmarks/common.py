@@ -24,12 +24,28 @@ import numpy as np
 
 from repro.core import das, oracle, simulator as sim, workloads
 
-N_INSTANCES = int(os.environ.get("REPRO_BENCH_INSTANCES", "60"))
+def _env_int(name: str, default: int) -> int:
+    """Positive-integer env knob; garbage or non-positive values are
+    configuration errors, not something to silently coerce."""
+    raw = os.environ.get(name)
+    if raw is None or raw.strip() == "":
+        return default
+    try:
+        val = int(raw.strip())
+    except ValueError:
+        raise ValueError(
+            f"{name}={raw!r} is not an integer (default {default})") from None
+    if val <= 0:
+        raise ValueError(f"{name}={val} must be a positive integer")
+    return val
+
+
+N_INSTANCES = _env_int("REPRO_BENCH_INSTANCES", 60)
 # training scenarios: a representative subset (all 40 x 14 in the full run,
 # REPRO_BENCH_FULL=1)
 FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
 # scenario-axis chunk size for run_batch (memory bound, not a result knob)
-BATCH = int(os.environ.get("REPRO_BENCH_BATCH", "16"))
+BATCH = _env_int("REPRO_BENCH_BATCH", 16)
 
 TRAIN_MIXES = list(range(40)) if FULL else [0, 1, 2, 3, 4, 5, 8, 12, 17, 22]
 TRAIN_RATES = list(range(14)) if FULL else [0, 3, 5, 7, 9, 11, 12, 13]
@@ -95,7 +111,34 @@ def eval_grid(cells: Sequence[Tuple[int, int]], mode: int,
     )
     res = sim.run_batch(mode, stacked, params(), tree=tree,
                         rate_threshold=rate_threshold, batch_size=BATCH)
-    return [sim.result_at(res, k) for k in range(len(cells))]
+    out = [sim.result_at(res, k) for k in range(len(cells))]
+    report_health(out, label=f"mode {mode}", cells=cells)
+    return out
+
+
+def report_health(results: Sequence[sim.SimResult], label: str = "",
+                  cells: Sequence[Tuple[int, int]] | None = None) -> Dict:
+    """Aggregate simulator health counters over a sweep and warn loudly.
+
+    A stalled cell (simulator hit its iteration guard before draining the
+    workload) or a dropped job (fault-injection deadline / retry
+    exhaustion) silently skews averages; every grid sweep prints them."""
+    stalled = [k for k, r in enumerate(results) if bool(np.asarray(r.stalled))]
+    dropped_jobs = int(sum(int(np.asarray(r.n_dropped_jobs))
+                           for r in results))
+    dropped_tasks = int(sum(int(np.asarray(r.n_dropped_tasks))
+                            for r in results))
+    health = {"stalled_cells": len(stalled), "dropped_jobs": dropped_jobs,
+              "dropped_tasks": dropped_tasks}
+    if stalled:
+        where = [cells[k] for k in stalled] if cells is not None else stalled
+        print(f"# WARNING [{label}]: {len(stalled)} stalled cell(s) at "
+              f"{where[:8]}{'...' if len(where) > 8 else ''} — averages "
+              "exclude unfinished work")
+    if dropped_jobs:
+        print(f"# health [{label}]: {dropped_jobs} dropped job(s) / "
+              f"{dropped_tasks} task(s) across {len(results)} cell(s)")
+    return health
 
 
 def eval_modes_grid(cells: Sequence[Tuple[int, int]],

@@ -1,0 +1,118 @@
+"""Fault-injection degradation curves: scheduler quality as PEs die.
+
+Progressively fails the accelerator PEs (FFT -> FIR -> FEC -> SAP) at
+t=0 and sweeps LUT / ETF / DAS over the scenarios in ONE `run_batch`
+call per mode (the same workload stacked S times + `faults.stack_plans`
+along the scenario axis). Graceful degradation means the latency curve
+is monotone non-decreasing in the number of dead PEs and every scenario
+still completes all jobs (no stalls, no drops — failures at t=0 revoke
+nothing in flight, so this isolates pure scheduling degradation).
+
+    PYTHONPATH=src python -m benchmarks.faults [--smoke] [--csv]
+
+--smoke runs a 4-point curve with LUT/ETF only (no classifier training),
+sized for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import faults, simulator as sim, soc, workloads
+
+# the cell to degrade: a mid-load mix x rate (latency-sensitive but not
+# saturated, so extra CPU pressure is visible without stalling)
+MIX_IDX, RATE_IDX = 5, 6
+
+# kill accelerators in cluster order: FFT(4) -> FIR(4) -> FEC(1) -> SAP(2)
+ACCEL_PES = np.where(soc.PE_CLUSTER >= soc.FFT_ACC)[0]
+
+# tolerated non-monotonicity: a k+1 point may undercut point k by 2%
+# (re-placement can shift NoC traffic in the survivors' favor slightly)
+MONO_TOL = 1.02
+
+
+def _plan_for(k: int) -> faults.FaultPlan:
+    plan = faults.healthy_plan()
+    if k:
+        plan = faults.fail_pes(plan, ACCEL_PES[:k].tolist(), at=0.0)
+    return plan
+
+
+def _curve(mode: int, wl_b, plan_b, tree=None) -> List[sim.SimResult]:
+    res = sim.run_batch(mode, wl_b, common.params(), tree=tree,
+                        plan=plan_b, batch_size=common.BATCH)
+    n = int(np.asarray(plan_b.pe_fail_at).shape[0])
+    return [sim.result_at(res, k) for k in range(n)]
+
+
+def _monotone(avg: List[float]) -> bool:
+    return all(b >= a / MONO_TOL for a, b in zip(avg, avg[1:]))
+
+
+def run(csv: bool = False, smoke: bool = False) -> Dict:
+    ks = [0, 4, 8, len(ACCEL_PES)] if smoke else list(range(len(ACCEL_PES) + 1))
+    wl = common.suite().build(MIX_IDX, RATE_IDX)
+    wl_b = workloads.stack_workloads([wl] * len(ks))
+    plan_b = faults.stack_plans([_plan_for(k) for k in ks])
+
+    sweeps = [("LUT", sim.MODE_LUT, None), ("ETF", sim.MODE_ETF, None)]
+    if not smoke:
+        sweeps.append(("DAS", sim.MODE_DAS, common.das_policy().tree))
+
+    t0 = time.perf_counter()
+    out: Dict[str, List[sim.SimResult]] = {
+        name: _curve(mode, wl_b, plan_b, tree=tree)
+        for name, mode, tree in sweeps
+    }
+    us = time.perf_counter() - t0
+
+    ok = True
+    curves = {}
+    for name, results in out.items():
+        avg = [float(r.avg_exec_us) for r in results]
+        edp = [float(r.edp) for r in results]
+        drops = [int(r.n_dropped_jobs) for r in results]
+        retries = [int(r.n_retries) for r in results]
+        stalls = [bool(r.stalled) for r in results]
+        mono = _monotone(avg)
+        healthy = not any(stalls) and not any(drops)
+        ok = ok and mono and healthy
+        curves[name] = {"k": ks, "avg_exec_us": avg, "edp": edp,
+                        "dropped_jobs": drops, "retries": retries,
+                        "monotone": mono}
+        if not csv:
+            pts = "  ".join(f"k={k}:{a:7.2f}" for k, a in zip(ks, avg))
+            print(f"{name:4s} avg exec (us) vs dead accel PEs: {pts}")
+            print(f"     EDP x{edp[-1]/edp[0]:.2f} at full accel loss; "
+                  f"drops={sum(drops)} retries={sum(retries)} "
+                  f"stalls={sum(stalls)}  "
+                  f"monotone: {'PASS' if mono else 'MISS'}")
+    if csv:
+        slope = {n: c["avg_exec_us"][-1] / c["avg_exec_us"][0]
+                 for n, c in curves.items()}
+        deg = "|".join(f"{n}:{s:.3f}" for n, s in slope.items())
+        print(f"faults,{us*1e6:.0f},{deg}")
+    else:
+        print(f"  check: degradation curves monotone, no stalls/drops: "
+              f"{'PASS' if ok else 'MISS'}")
+    return {"curves": curves, "ok": ok}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--csv", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="4-point curve, LUT/ETF only (CI-sized)")
+    args = ap.parse_args(argv)
+    res = run(csv=args.csv, smoke=args.smoke)
+    if not res["ok"]:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -13,8 +13,8 @@ import argparse
 import time
 import traceback
 
-from benchmarks import (fig2, fig3, heuristic, overhead, roofline_table,
-                        serving_das, summary40, table2)
+from benchmarks import (faults, fig2, fig3, heuristic, overhead,
+                        roofline_table, serving_das, summary40, table2)
 
 SECTIONS = [
     ("fig2", "Fig.2: exec time + EDP, 3 workloads x 4 schedulers", fig2.run),
@@ -23,6 +23,7 @@ SECTIONS = [
     ("summary40", "40-workload summary claims", summary40.run),
     ("heuristic", "static-threshold heuristic comparison", heuristic.run),
     ("overhead", "scheduling overhead anchors", overhead.run),
+    ("faults", "fault-injection degradation curves", faults.run),
     ("serving_das", "beyond-paper: DAS serving dispatch", serving_das.run),
     ("roofline", "dry-run roofline table", roofline_table.run),
 ]

@@ -30,9 +30,11 @@ class DASPolicy:
     test_accuracy: float
     n_train: int
 
-    def run(self, wl, params=None) -> sim.SimResult:
+    def run(self, wl, params=None, plan=None) -> sim.SimResult:
+        """Simulate this policy on `wl`; `plan` is an optional
+        `faults.FaultPlan` for fault-injection runs."""
         params = params or sim.make_params()
-        return sim.run(sim.MODE_DAS, wl, params, tree=self.tree)
+        return sim.run(sim.MODE_DAS, wl, params, tree=self.tree, plan=plan)
 
 
 def fit_policy(ds: oracle.OracleDataset,

@@ -1,0 +1,221 @@
+"""Fault-injection plans for the DSSoC simulator (DS3/CEDR-style dynamics).
+
+A `FaultPlan` describes everything that can go wrong during one scenario,
+as pure JAX-compatible arrays so plans batch along the scenario axis
+exactly like `tree` / `rate_threshold` in `simulator.simulate_batch`:
+
+  * **permanent PE failures** — PE `p` is unavailable during
+    `[pe_fail_at[p], pe_repair_at[p])`. Schedulers never place work on a
+    dead PE; at the failure instant every in-flight assignment on the PE
+    is revoked (killed) and re-enqueued.
+  * **transient faults** — at each finite `transient_at[p, k]` the PE
+    glitches: assignments made before that instant are killed and
+    re-enqueued, but the PE stays available.
+  * **cluster slowdown** — `cluster_slowdown[c]` (>= 1) multiplies the
+    execution time of every task run on cluster `c` (DVFS / thermal
+    throttling). Energy scales with the stretched time.
+  * **retry budget** — a task killed by a fault is re-enqueued at the
+    FIFO tail at most `max_retries` times; the next kill drops its whole
+    job (application instance).
+  * **per-job deadline** — an application instance still incomplete
+    `deadline_us` after its arrival is dropped: all of its unfinished
+    tasks are cancelled and counted, instead of the simulator spinning
+    toward the `stalled` guard.
+
+Degradation semantics in the simulator (`simulator.py`, mirrored by the
+host-side reference `ref_sim.py`):
+
+  * the LUT (fast) scheduler falls back to the most energy-efficient
+    *healthy* cluster that can run the task type — when an accelerator
+    cluster is fully dead, accelerated tasks degrade to the CPU clusters
+    (which can run everything);
+  * ETF masks dead PEs out of its earliest-finish-time search;
+  * a decision is only taken when the chosen scheduler has a feasible
+    (task, PE) pair; otherwise simulated time advances to the next event
+    (including repairs, fault instants and job deadlines).
+
+`healthy_plan()` is the identity: threading it through the simulator is
+bit-identical to running without a plan.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import soc
+
+# transient-fault slots per PE (finite entries are events, inf = unused)
+MAX_TRANSIENTS = 4
+
+_INF = np.float32(np.inf)
+
+
+class FaultPlan(NamedTuple):
+    """Per-scenario fault schedule (pure arrays; batch with a leading axis).
+
+    All times are simulated microseconds. `inf` means "never".
+    """
+
+    pe_fail_at: jax.Array       # [P] f32 permanent-failure time
+    pe_repair_at: jax.Array     # [P] f32 repair time (inf = never repaired)
+    transient_at: jax.Array     # [P, MAX_TRANSIENTS] f32 glitch times
+    cluster_slowdown: jax.Array  # [C] f32 exec-time multiplier (>= 1)
+    max_retries: jax.Array      # [] i32 per-task kill->re-enqueue budget
+    deadline_us: jax.Array      # [] f32 per-job deadline after arrival
+
+
+def healthy_plan(n_pes: int = soc.N_PES,
+                 n_clusters: int = soc.N_CLUSTERS) -> FaultPlan:
+    """The no-fault identity plan (everything healthy forever)."""
+    return FaultPlan(
+        pe_fail_at=np.full(n_pes, _INF, np.float32),
+        pe_repair_at=np.full(n_pes, _INF, np.float32),
+        transient_at=np.full((n_pes, MAX_TRANSIENTS), _INF, np.float32),
+        cluster_slowdown=np.ones(n_clusters, np.float32),
+        max_retries=np.int32(0),
+        deadline_us=np.float32(_INF),
+    )
+
+
+# ---------------------------------------------------------------------------
+# plan builders (host-side, numpy in / numpy out)
+# ---------------------------------------------------------------------------
+def _np_plan(plan: FaultPlan) -> FaultPlan:
+    return FaultPlan(*[np.array(x) for x in plan])
+
+
+def fail_pes(plan: FaultPlan, pes: Sequence[int], at: float,
+             repair_at: float = float("inf")) -> FaultPlan:
+    """Permanently fail `pes` at time `at` (optionally repaired later)."""
+    p = _np_plan(plan)
+    p.pe_fail_at[list(pes)] = np.float32(at)
+    p.pe_repair_at[list(pes)] = np.float32(repair_at)
+    return p
+
+
+def fail_cluster(plan: FaultPlan, cluster: int, at: float,
+                 repair_at: float = float("inf")) -> FaultPlan:
+    """Fail every PE of `cluster` (see `soc.CLUSTER_NAMES`)."""
+    pes = np.where(soc.PE_CLUSTER == cluster)[0]
+    return fail_pes(plan, pes, at, repair_at=repair_at)
+
+
+def add_transient(plan: FaultPlan, pe: int, at: float) -> FaultPlan:
+    """Add one transient glitch on `pe` at time `at` (kills in-flight work)."""
+    p = _np_plan(plan)
+    row = p.transient_at[pe]
+    free = np.where(~np.isfinite(row))[0]
+    if free.size == 0:
+        raise ValueError(
+            f"PE {pe} already has {MAX_TRANSIENTS} transient faults")
+    row[free[0]] = np.float32(at)
+    return p
+
+
+def slow_cluster(plan: FaultPlan, cluster: int, factor: float) -> FaultPlan:
+    """Throttle `cluster` by `factor` (>= 1; DVFS/thermal slowdown)."""
+    p = _np_plan(plan)
+    p.cluster_slowdown[cluster] = np.float32(factor)
+    return p
+
+
+def with_retries(plan: FaultPlan, max_retries: int) -> FaultPlan:
+    p = _np_plan(plan)
+    return p._replace(max_retries=np.int32(max_retries))
+
+
+def with_deadline(plan: FaultPlan, deadline_us: float) -> FaultPlan:
+    p = _np_plan(plan)
+    return p._replace(deadline_us=np.float32(deadline_us))
+
+
+def random_plan(seed: int, n_fail: int = 2, n_transient: int = 4,
+                t_horizon_us: float = 200.0,
+                max_retries: int = 2,
+                deadline_us: float = float("inf"),
+                n_pes: int = soc.N_PES) -> FaultPlan:
+    """A seeded adversarial plan: `n_fail` permanent failures (half of them
+    repaired) plus `n_transient` transient glitches inside the horizon."""
+    rng = np.random.RandomState(seed)
+    plan = with_deadline(with_retries(healthy_plan(), max_retries),
+                         deadline_us)
+    fail = rng.choice(n_pes, size=min(n_fail, n_pes), replace=False)
+    for j, pe in enumerate(fail):
+        at = float(rng.uniform(0.0, t_horizon_us))
+        rep = at + float(rng.uniform(0.2, 1.0) * t_horizon_us) \
+            if j % 2 == 0 else float("inf")
+        plan = fail_pes(plan, [int(pe)], at, repair_at=rep)
+    for _ in range(n_transient):
+        plan = add_transient(plan, int(rng.randint(n_pes)),
+                             float(rng.uniform(0.0, t_horizon_us)))
+    return plan
+
+
+def stack_plans(plans: Sequence[FaultPlan]) -> FaultPlan:
+    """Stack same-shape plans into a leading scenario axis (for
+    `simulate_batch` sweeps, mirroring `workloads.stack_workloads`)."""
+    if not plans:
+        raise ValueError("stack_plans: need at least one plan")
+    return FaultPlan(*[
+        np.stack([np.asarray(f) for f in fields]) for fields in zip(*plans)
+    ])
+
+
+def is_batched(plan: FaultPlan) -> bool:
+    """True when the plan carries a leading scenario axis."""
+    return np.ndim(plan.pe_fail_at) == 2
+
+
+def validate_plan(plan: FaultPlan, n_pes: int = soc.N_PES,
+                  n_clusters: int = soc.N_CLUSTERS) -> FaultPlan:
+    """Host-side sanity checks; raises ValueError on malformed plans."""
+    p = FaultPlan(*[np.asarray(x) for x in plan])
+    lead = p.pe_fail_at.shape[:-1]
+    if p.pe_fail_at.shape[-1] != n_pes or p.pe_repair_at.shape[-1] != n_pes:
+        raise ValueError(
+            f"FaultPlan: per-PE arrays must have trailing dim {n_pes}, got "
+            f"{p.pe_fail_at.shape} / {p.pe_repair_at.shape}")
+    if p.transient_at.shape[-2:] != (n_pes, MAX_TRANSIENTS) \
+            or p.transient_at.shape[:-2] != lead:
+        raise ValueError(
+            f"FaultPlan: transient_at must end in ({n_pes}, "
+            f"{MAX_TRANSIENTS}), got {p.transient_at.shape}")
+    if p.cluster_slowdown.shape[-1] != n_clusters:
+        raise ValueError(
+            f"FaultPlan: cluster_slowdown must have trailing dim "
+            f"{n_clusters}, got {p.cluster_slowdown.shape}")
+    for name in ("pe_fail_at", "pe_repair_at", "transient_at", "deadline_us"):
+        v = getattr(p, name)
+        if np.isnan(v).any() or (v < 0).any():
+            raise ValueError(f"FaultPlan.{name}: times must be >= 0, no NaN")
+    if (p.pe_repair_at < p.pe_fail_at).any():
+        raise ValueError("FaultPlan: pe_repair_at must be >= pe_fail_at")
+    if np.isnan(p.cluster_slowdown).any() or (p.cluster_slowdown < 1.0).any():
+        raise ValueError("FaultPlan: cluster_slowdown must be >= 1.0")
+    if (p.max_retries < 0).any():
+        raise ValueError("FaultPlan: max_retries must be >= 0")
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# jnp helpers shared by the jitted simulator
+# ---------------------------------------------------------------------------
+def alive_at(plan: FaultPlan, now) -> jax.Array:
+    """[P] bool availability mask at time `now` (dead inside
+    `[fail_at, repair_at)`)."""
+    return ~((plan.pe_fail_at <= now) & (now < plan.pe_repair_at))
+
+
+def pe_slowdown(plan: FaultPlan, pe_cluster: jax.Array) -> jax.Array:
+    """[P] per-PE exec-time multiplier from the cluster slowdown vector."""
+    return plan.cluster_slowdown[pe_cluster]
+
+
+def kill_times(plan: FaultPlan) -> jax.Array:
+    """[P, 1 + MAX_TRANSIENTS] every instant that revokes in-flight
+    assignments on a PE (permanent failure + transient glitches)."""
+    return jnp.concatenate(
+        [plan.pe_fail_at[:, None], plan.transient_at], axis=1)

@@ -33,6 +33,38 @@ so the scenario axis vmaps: `stack_workloads` (workloads.py) stacks a suite's
 `simulate` over it (`SimParams` held constant; `tree` / `rate_threshold`
 optionally per-scenario for DAS / threshold sweeps). Every `SimResult` field
 gains a leading scenario axis; `result_at` slices one scenario back out.
+
+Fault injection and graceful degradation
+----------------------------------------
+Passing a `faults.FaultPlan` (`plan=` on `simulate` / `run` / `run_batch`)
+threads a fault model through the same event loop, adding three event
+classes between completions and arrivals:
+
+  kill      a permanent PE failure or transient glitch revokes every
+            assignment made on that PE before the fault instant; the task
+            re-enters the FIFO tail (bounded by `plan.max_retries`, after
+            which its whole job is dropped),
+  deadline  a job (application instance) still incomplete `deadline_us`
+            after its arrival is dropped with full accounting instead of
+            spinning toward the `stalled` guard,
+  drop      (inside kill/deadline) cancels every unfinished task of a job
+            and purges them from the ready queue.
+
+Schedulers degrade rather than fail: the LUT falls back to the most
+energy-efficient *healthy* cluster for the task type (accelerated tasks
+degrade to the CPU clusters when their accelerator is fully dead), ETF
+masks dead PEs out of its earliest-finish-time search, and a decision is
+only taken when the chosen scheduler has a feasible (task, PE) pair —
+otherwise time advances to the next event, which now includes repairs,
+fault instants and job deadlines. Cluster slowdown factors stretch the
+cached exec rows at ready-queue push time.
+
+`plan=None` (the default) traces the exact pre-fault computation — zero
+overhead and bit-identical results — and `plan=faults.healthy_plan()`
+runs the fault path with nothing failing, which the tests assert is also
+bit-identical. Batched sweeps accept a plan with a leading scenario axis
+(`faults.stack_plans`), batching fault scenarios like `tree` /
+`rate_threshold`.
 """
 from __future__ import annotations
 
@@ -43,6 +75,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import faults as flt
 from repro.core import soc
 from repro.core.workloads import FlatWorkload, FRAME_KBITS
 
@@ -87,10 +120,13 @@ class SimParams(NamedTuple):
     lut_cluster: jax.Array    # [n_types] i32
     cluster_pe_mask: jax.Array  # [C, P] bool
     us_per_kb: jax.Array      # [] f32
+    cluster_energy: jax.Array  # [n_types, C] f32 (inf = cannot run); ranks
+    #   the LUT's per-type fallback order when clusters die.
 
 
 def make_params(cfg: soc.SoCConfig | None = None) -> SimParams:
     cfg = cfg or soc.default_soc()
+    soc.validate_config(cfg)
     return SimParams(
         exec_pe=jnp.asarray(cfg.exec_on_pe()),
         pe_cluster=jnp.asarray(cfg.pe_cluster),
@@ -98,6 +134,7 @@ def make_params(cfg: soc.SoCConfig | None = None) -> SimParams:
         lut_cluster=jnp.asarray(cfg.lut_cluster),
         cluster_pe_mask=jnp.asarray(cfg.cluster_pe_mask),
         us_per_kb=jnp.float32(cfg.us_per_kb),
+        cluster_energy=jnp.asarray(cfg.task_energy),
     )
 
 
@@ -171,6 +208,24 @@ class SimState(NamedTuple):
     log_policy: jax.Array   # [T] i8 (0 fast, 1 slow)
     log_agree: jax.Array    # [T] i8 (oracle: fast/slow decisions identical)
     log_task: jax.Array     # [T] i32
+    # fault / degradation state (written only when a FaultPlan is threaded;
+    # status gains 5 = dropped with its job)
+    pe_alive: jax.Array     # [P] bool live availability mask (refreshed from
+    #   the plan's fail/repair windows whenever `now` moves)
+    pe_slow: jax.Array      # [P] f32 exec-time multiplier (throttling)
+    assign_t: jax.Array     # [T] f32 decision time of the live assignment;
+    #   a fault at time tau only revokes assignments with assign_t < tau
+    retries: jax.Array      # [T] i32 fault-kill count per task
+    kill_t: jax.Array       # [T] f32 time of the last kill (recovery base)
+    inst_rem: jax.Array     # [I] i32 unfinished tasks per instance
+    job_dropped: jax.Array  # [I] bool instance was dropped
+    n_kills: jax.Array      # [] i32 fault events that revoked an assignment
+    n_retries: jax.Array    # [] i32 kills that re-enqueued (vs dropped)
+    reexec_us: jax.Array    # [] f32 executed work revoked then redone
+    n_dropped_tasks: jax.Array  # [] i32
+    recovery_us: jax.Array  # [] f32 sum over recovered tasks of
+    #   (final finish - last kill time)
+    n_recovered: jax.Array  # [] i32 killed tasks that eventually finished
 
 
 class SimResult(NamedTuple):
@@ -196,6 +251,16 @@ class SimResult(NamedTuple):
     log_task: jax.Array
     finish: jax.Array          # [T] f32
     pe_of: jax.Array           # [T] i32
+    # fault / degradation accounting (all zero without a FaultPlan)
+    n_faults: jax.Array        # [] i32 kill events (assignment revocations)
+    n_retries: jax.Array       # [] i32 kills that re-enqueued the task
+    reexec_us: jax.Array       # [] f32 executed work revoked then redone
+    n_dropped_jobs: jax.Array  # [] i32 instances dropped (deadline / retries)
+    n_dropped_tasks: jax.Array  # [] i32 tasks cancelled with their job
+    recovery_us: jax.Array     # [] f32 sum of (finish - last kill) over
+    #   killed tasks that eventually completed
+    n_recovered: jax.Array     # [] i32 killed tasks that completed anyway
+    job_dropped: jax.Array     # [I] bool per-instance drop flags
 
 
 # ---------------------------------------------------------------------------
@@ -336,6 +401,67 @@ def _lut_choice(p: SimParams, wl: FlatWorkload, s: SimState):
     return slot, pe
 
 
+def _lut_choice_degraded(p: SimParams, wl: FlatWorkload, s: SimState):
+    """Fault-aware fast scheduler: (slot, pe, feasible).
+
+    Re-ranks clusters by `cluster_energy` restricted to clusters with at
+    least one live PE, so a dead accelerator degrades to the next-best
+    healthy cluster (ultimately the CPU clusters, which run every type).
+    With every PE alive this reduces exactly to `_lut_choice`: the argmin
+    over the full energy row *is* the precomputed `lut_cluster` entry
+    (same table, same first-minimum tie-break).
+    """
+    slot = jnp.int32(0)
+    t = jnp.maximum(s.ready_ids[0], 0)
+    tt = wl.task_type[t]
+    cl_alive = (p.cluster_pe_mask & s.pe_alive[None, :]).any(axis=1)  # [C]
+    e = jnp.where(cl_alive, p.cluster_energy[tt], _INF)               # [C]
+    cl = jnp.argmin(e).astype(jnp.int32)
+    ok = (s.ready_ids[0] >= 0) & jnp.isfinite(e[cl])
+    free = jnp.where(p.cluster_pe_mask[cl] & s.pe_alive, s.pe_free, _INF)
+    pe = jnp.argmin(free).astype(jnp.int32)
+    return slot, pe, ok
+
+
+def _etf_choice_degraded(p: SimParams, wl: FlatWorkload, s: SimState):
+    """Fault-aware ETF: (slot, pe, feasible) with dead PEs masked out of
+    the earliest-finish-time search. All-alive == `_etf_choice` exactly."""
+    slot_ok = s.ready_ids >= 0                      # [R]
+    ft = jnp.maximum(jnp.maximum(s.ready_avail, s.pe_free[None, :]),
+                     s.now) + s.ready_exec
+    ft = jnp.where(slot_ok[:, None] & s.pe_alive[None, :], ft, _INF)
+    flat = jnp.argmin(ft)
+    slot = flat // ft.shape[1]
+    pe = flat % ft.shape[1]
+    ok = jnp.isfinite(ft.reshape(-1)[flat])
+    return slot.astype(jnp.int32), pe.astype(jnp.int32), ok
+
+
+def _can_schedule(mode: int, p: SimParams, wl: FlatWorkload, s: SimState,
+                  tree: DTree, rate_threshold: jax.Array) -> jax.Array:
+    """Whether the scheduler the mode would invoke has a feasible
+    (task, PE) pair under the current availability mask (fault path only).
+
+    The fast path considers only the FIFO head, so a head whose every
+    capable cluster is dead blocks the queue until a repair or its job's
+    deadline drop — head-of-line blocking is part of the degradation
+    model. ETF infeasible implies no ready task can run anywhere healthy.
+    """
+    if mode in (MODE_LUT, MODE_ORACLE):
+        return _lut_choice_degraded(p, wl, s)[2]
+    if mode in (MODE_ETF, MODE_ETF_IDEAL):
+        return _etf_choice_degraded(p, wl, s)[2]
+    # DAS / THRESHOLD: feasibility of the scheduler the policy will pick
+    feats = _features(p, wl, s)
+    if mode == MODE_DAS:
+        use_slow = tree.predict(feats).astype(bool)
+    else:
+        use_slow = feats[FEAT_RATE] >= rate_threshold
+    ok_f = _lut_choice_degraded(p, wl, s)[2]
+    ok_s = _etf_choice_degraded(p, wl, s)[2]
+    return jnp.where(use_slow, ok_s, ok_f)
+
+
 # ---------------------------------------------------------------------------
 # state mutations
 #
@@ -402,7 +528,8 @@ def _next_completion(s: SimState):
 
 def _push_ready_many(p: SimParams, wl: FlatWorkload, s: SimState,
                      tasks: jax.Array, bases: jax.Array,
-                     do_push: jax.Array, rows_avail=None) -> SimState:
+                     do_push: jax.Array, rows_avail=None,
+                     plan=None) -> SimState:
     """FIFO-push up to K tasks (k ascending), caching their [P] rows.
 
     Replicates K sequential single-task pushes exactly. Slot assignment:
@@ -417,6 +544,11 @@ def _push_ready_many(p: SimParams, wl: FlatWorkload, s: SimState,
     if rows_avail is None:
         rows_avail = _avail_rows(p, wl, s, t, bases)      # [K, P]
     rows_exec = p.exec_pe[wl.task_type[t]]                # [K, P]
+    if plan is not None:
+        # cluster slowdown stretches the cached exec rows at push time
+        # (pe_slow is constant per scenario, so the cache stays valid;
+        # x1.0 when healthy keeps the healthy plan bit-exact)
+        rows_exec = rows_exec * s.pe_slow[None, :]
     want = do_push.astype(jnp.int32)
     before = s.ready_cnt + jnp.cumsum(want) - want        # [K] exclusive
     can = do_push & (before < R_MAX)
@@ -459,7 +591,7 @@ def _pop_slot(s: SimState, slot: jax.Array, active=None) -> SimState:
 def _assign(p: SimParams, wl: FlatWorkload, s: SimState, slot: jax.Array,
             pe: jax.Array, lat: jax.Array, sched_e: jax.Array,
             is_slow: jax.Array, feats: jax.Array,
-            agree: jax.Array, active=None) -> SimState:
+            agree: jax.Array, active=None, plan=None) -> SimState:
     task = jnp.maximum(s.ready_ids[slot], 0)
     sched_done = jnp.maximum(s.sched_free, s.now) + lat
     avail = s.ready_avail[slot, pe]
@@ -496,11 +628,16 @@ def _assign(p: SimParams, wl: FlatWorkload, s: SimState, slot: jax.Array,
         log_agree=_gset(active, s.log_agree, d, agree.astype(jnp.int8)),
         log_task=_gset(active, s.log_task, d, task),
     )
+    if plan is not None:
+        # a fault at tau revokes live assignments with assign_t < tau, so
+        # a decision taken *at* a fault instant is never insta-killed
+        s = s._replace(assign_t=_gset(active, s.assign_t, task, s.now))
     return _pop_slot(s, slot, active=active)
 
 
 def _process_completion(p: SimParams, wl: FlatWorkload,
-                        s: SimState, active=None, t=None) -> SimState:
+                        s: SimState, active=None, t=None,
+                        plan=None) -> SimState:
     if t is None:
         # earliest-finishing running task; when a completion is due, every
         # task at the minimum of `fin_run` has finish <= now, so this is
@@ -511,6 +648,20 @@ def _process_completion(p: SimParams, wl: FlatWorkload,
                    fin_run=_gset(active, s.fin_run, t, _INF),
                    n_running=s.n_running - act,
                    n_done=s.n_done + act)
+    if plan is not None:
+        tt = jnp.maximum(t, 0)
+        rec = s.retries[tt] > 0
+        if active is not None:
+            rec &= active
+        s = s._replace(
+            inst_rem=_gadd(active, s.inst_rem, wl.inst_id[tt], -1),
+            # a previously-killed task finishing anyway: recovery latency
+            # is measured from its last kill to its final finish
+            recovery_us=_gate(rec, s.recovery_us
+                              + (s.finish[tt] - s.kill_t[tt]),
+                              s.recovery_us),
+            n_recovered=s.n_recovered + jnp.asarray(rec).astype(jnp.int32),
+        )
     # restore the fin_seg invariant: rescan only the SEG-sized block of
     # the retired task (reads the post-scatter fin_run)
     seg = t // SEG
@@ -533,11 +684,11 @@ def _process_completion(p: SimParams, wl: FlatWorkload,
     pv = jnp.arange(pr.shape[1])[None, :] < wl.n_preds[sc][:, None]
     bases = jnp.where(pv, s.finish[jnp.maximum(pr, 0)], _NEG).max(axis=1)
     return _push_ready_many(p, wl, s, sc, jnp.maximum(bases, s.now),
-                            ready_now)
+                            ready_now, plan=plan)
 
 
 def _process_arrival(p: SimParams, wl: FlatWorkload, s: SimState,
-                     active=None) -> SimState:
+                     active=None, plan=None) -> SimState:
     i = s.arr_ptr
     ic = jnp.minimum(i, wl.inst_arrival.shape[0] - 1)
     t_arr = wl.inst_arrival[ic]
@@ -559,15 +710,192 @@ def _process_arrival(p: SimParams, wl: FlatWorkload, s: SimState,
     rows = jnp.broadcast_to(bases[:, None],
                             (roots.shape[0], s.pe_free.shape[0]))
     return _push_ready_many(p, wl, s, jnp.maximum(roots, 0), bases, valid,
-                            rows_avail=rows)
+                            rows_avail=rows, plan=plan)
+
+
+# ---------------------------------------------------------------------------
+# fault events (kill / deadline / drop) — only traced when a FaultPlan is
+# threaded; `plan=None` callers never reach these.
+# ---------------------------------------------------------------------------
+def _pending_kill(plan, s: SimState):
+    """(due, task, tau): earliest fault instant that revokes a live
+    assignment — a running task whose PE has a permanent failure or
+    transient glitch at tau with `assign_t < tau <= now`. Ties break to
+    the lowest task id (argmin), matching `ref_sim`."""
+    taus = flt.kill_times(plan)                         # [P, K]
+    t_taus = taus[jnp.maximum(s.pe_of, 0)]              # [T, K]
+    running = s.status == 3
+    due = (running[:, None] & (s.assign_t[:, None] < t_taus)
+           & (t_taus <= s.now))                         # [T, K]
+    tau_t = jnp.where(due, t_taus, _INF).min(axis=1)    # [T]
+    t = jnp.argmin(tau_t).astype(jnp.int32)
+    return due.any(), t, tau_t[t]
+
+
+def _drop_instance(p: SimParams, wl: FlatWorkload, s: SimState,
+                   inst: jax.Array, active=None) -> SimState:
+    """Cancel every unfinished task of instance `inst` (deadline miss or
+    retry exhaustion). Running work rolls back its unexecuted tail
+    (busy time + energy), queued tasks are purged from the FIFO with
+    order preserved, and every victim retires as status 5 so the
+    termination count (`n_done`) still converges."""
+    T = s.status.shape[0]
+    P = s.pe_free.shape[0]
+    ar = jnp.arange(T)
+    inst = jnp.maximum(inst, 0)
+    victim = (wl.inst_id == inst) & wl.task_valid & (s.status < 4)
+    if active is not None:
+        victim &= active
+    n_v = victim.sum().astype(jnp.int32)
+
+    # roll back the unexecuted tail of running victims; keep the executed
+    # prefix (that energy really was burned)
+    runn = victim & (s.status == 3)
+    pe = jnp.maximum(s.pe_of, 0)
+    exec_total = jnp.where(runn, s.finish - s.start, 0.0)
+    executed = jnp.where(runn, jnp.clip(s.now - s.start, 0.0, exec_total),
+                         0.0)
+    unexec = exec_total - executed
+    pe_ix = jnp.where(runn, pe, P)
+    pe_busy = s.pe_busy.at[pe_ix].add(-unexec, mode="drop")
+    e_back = (jnp.where(runn, unexec * p.pe_power[pe], 0.0)).sum()
+    # PEs that lost a victim rebuild pe_free from surviving assignments;
+    # untouched PEs keep their exact value
+    pe_hit = jnp.zeros(P, bool).at[pe_ix].set(True, mode="drop")
+    surv = (s.status == 3) & ~victim
+    surv_fin = jnp.full(P, _NEG).at[jnp.where(surv, pe, P)].max(
+        s.finish, mode="drop")
+    pe_free = jnp.where(pe_hit, jnp.maximum(surv_fin, s.now), s.pe_free)
+
+    vix = jnp.where(victim, ar, T)
+    status = s.status.at[vix].set(5, mode="drop")
+    # -inf keeps dropped tasks out of the makespan / inst_fin maxima
+    finish = s.finish.at[vix].set(_NEG, mode="drop")
+    fin_run = s.fin_run.at[jnp.where(runn, ar, s.fin_run.shape[0])].set(
+        _INF, mode="drop")
+    # victims may span many segments: full fin_seg rebuild (exactly the
+    # invariant value, so a no-op drop stays bit-identical)
+    fin_seg = fin_run.reshape(-1, SEG).min(axis=1)
+
+    # purge victims from the ready FIFO, preserving survivor order
+    in_q = s.ready_ids >= 0
+    is_v = jnp.where(in_q, victim[jnp.maximum(s.ready_ids, 0)], False)
+    keep = in_q & ~is_v
+    perm = jnp.argsort((~keep).astype(jnp.int32))  # stable: survivors first
+    new_cnt = keep.sum().astype(jnp.int32)
+    ids_p = jnp.where(jnp.arange(R_MAX) < new_cnt, s.ready_ids[perm], -1)
+
+    return s._replace(
+        status=status, finish=finish, fin_run=fin_run, fin_seg=fin_seg,
+        start=s.start.at[vix].set(_INF, mode="drop"),
+        assign_t=s.assign_t.at[vix].set(_INF, mode="drop"),
+        pe_busy=pe_busy, pe_free=pe_free,
+        task_energy=_gate(active, s.task_energy - e_back, s.task_energy),
+        n_running=s.n_running - runn.sum().astype(jnp.int32),
+        n_done=s.n_done + n_v,
+        n_dropped_tasks=s.n_dropped_tasks + n_v,
+        ready_ids=_gate(active, ids_p, s.ready_ids),
+        ready_avail=_gate(active, s.ready_avail[perm], s.ready_avail),
+        ready_exec=_gate(active, s.ready_exec[perm], s.ready_exec),
+        ready_cnt=_gate(active, new_cnt, s.ready_cnt),
+        inst_rem=_gset(active, s.inst_rem, inst, 0),
+        job_dropped=_gset(active, s.job_dropped, inst, True),
+    )
+
+
+def _process_kill(plan, p: SimParams, wl: FlatWorkload, s: SimState,
+                  t: jax.Array, active=None) -> SimState:
+    """Revoke the live assignment of running task `t` at the current time
+    (`now` sits exactly on the fault instant: advance stops at every plan
+    time). Executed work is wasted (`reexec_us`) but its energy/busy time
+    stay; the unexecuted tail rolls back. Within the retry budget the task
+    re-enters the FIFO tail at `now`; past it its whole job drops."""
+    T = s.status.shape[0]
+    t = jnp.maximum(t, 0)
+    pe = jnp.maximum(s.pe_of[t], 0)
+    exec_total = s.finish[t] - s.start[t]
+    executed = jnp.clip(s.now - s.start[t], 0.0, exec_total)
+    unexec = exec_total - executed
+    act = _gate_i(active)
+    exhausted = s.retries[t] >= plan.max_retries
+    if active is None:
+        rk = ~exhausted
+        dr = exhausted
+    else:
+        rk = active & ~exhausted
+        dr = active & exhausted
+
+    others = (s.status == 3) & (s.pe_of == pe) & (jnp.arange(T) != t)
+    new_free = jnp.maximum(jnp.where(others, s.finish, _NEG).max(), s.now)
+
+    s = s._replace(
+        status=_gset(active, s.status, t, 0),
+        start=_gset(active, s.start, t, _INF),
+        finish=_gset(active, s.finish, t, _INF),
+        fin_run=_gset(active, s.fin_run, t, _INF),
+        n_running=s.n_running - act,
+        pe_of=_gset(active, s.pe_of, t, -1),
+        assign_t=_gset(active, s.assign_t, t, _INF),
+        pe_free=_gset(active, s.pe_free, pe, new_free),
+        pe_busy=_gadd(active, s.pe_busy, pe, -unexec),
+        task_energy=_gate(active, s.task_energy - unexec * p.pe_power[pe],
+                          s.task_energy),
+        retries=_gadd(active, s.retries, t, 1),
+        kill_t=_gset(active, s.kill_t, t, s.now),
+        n_kills=s.n_kills + act,
+        n_retries=s.n_retries + jnp.asarray(rk).astype(jnp.int32),
+        reexec_us=_gate(active, s.reexec_us + executed, s.reexec_us),
+    )
+    # restore the fin_seg invariant for the killed task's segment
+    seg = t // SEG
+    blk = jax.lax.dynamic_slice(s.fin_run, (seg * SEG,), (SEG,))
+    s = s._replace(fin_seg=_gset(active, s.fin_seg, seg, blk.min()))
+
+    # retry: back to the FIFO tail, availability re-based at now (preds
+    # are all done, so the cached row is recomputable)
+    s = _push_ready_many(p, wl, s, t[None], s.now[None],
+                         jnp.asarray(rk)[None], plan=plan)
+    # exhausted: the whole job goes
+    return _drop_instance(p, wl, s, wl.inst_id[t], active=jnp.asarray(dr))
+
+
+def _pending_deadline(plan, wl: FlatWorkload, s: SimState):
+    """(due, inst): earliest arrived-but-incomplete instance past its
+    deadline. Ties break to the lowest instance id."""
+    I = wl.inst_arrival.shape[0]
+    arrived = jnp.arange(I) < s.arr_ptr
+    pend = arrived & wl.inst_valid & (s.inst_rem > 0)
+    dl = jnp.where(pend, wl.inst_arrival + plan.deadline_us, _INF)
+    due = pend & (dl <= s.now)
+    inst = jnp.argmin(jnp.where(due, dl, _INF)).astype(jnp.int32)
+    return due.any(), inst
+
+
+def _next_wakeup(plan, wl: FlatWorkload, s: SimState) -> jax.Array:
+    """Earliest strictly-future fault instant, repair, or pending job
+    deadline — extra advance targets so `now` lands exactly on each fault
+    event (a stop with nothing due simply advances again)."""
+    times = jnp.concatenate([plan.pe_fail_at, plan.pe_repair_at,
+                             plan.transient_at.reshape(-1)])
+    t1 = jnp.where(times > s.now, times, _INF).min()
+    I = wl.inst_arrival.shape[0]
+    arrived = jnp.arange(I) < s.arr_ptr
+    pend = arrived & wl.inst_valid & (s.inst_rem > 0)
+    dl = jnp.where(pend, wl.inst_arrival + plan.deadline_us, _INF)
+    t2 = jnp.where(dl > s.now, dl, _INF).min()
+    return jnp.minimum(t1, t2)
 
 
 # ---------------------------------------------------------------------------
 # the main loop
 # ---------------------------------------------------------------------------
-def _init_state(wl: FlatWorkload, n_pes: int) -> SimState:
+def _init_state(wl: FlatWorkload, n_pes: int, pe_slow=None) -> SimState:
     T = wl.task_type.shape[0]
+    I = wl.inst_arrival.shape[0]
     Tp = -(-T // SEG) * SEG       # fin_run padded so every segment is full
+    inst_cnt = jnp.zeros(I, jnp.int32).at[
+        jnp.where(wl.task_valid, wl.inst_id, I)
+    ].add(1, mode="drop")
     return SimState(
         now=jnp.float32(0.0), stalled=jnp.array(False),
         sched_free=jnp.float32(0.0),
@@ -594,40 +922,62 @@ def _init_state(wl: FlatWorkload, n_pes: int) -> SimState:
         log_policy=jnp.zeros(T, jnp.int8),
         log_agree=jnp.zeros(T, jnp.int8),
         log_task=jnp.full(T, -1, jnp.int32),
+        pe_alive=jnp.ones(n_pes, bool),
+        pe_slow=(jnp.ones(n_pes, jnp.float32) if pe_slow is None
+                 else jnp.asarray(pe_slow, jnp.float32)),
+        assign_t=jnp.full(T, _INF),
+        retries=jnp.zeros(T, jnp.int32),
+        kill_t=jnp.zeros(T, jnp.float32),
+        inst_rem=inst_cnt,
+        job_dropped=jnp.zeros(I, bool),
+        n_kills=jnp.int32(0), n_retries=jnp.int32(0),
+        reexec_us=jnp.float32(0.0), n_dropped_tasks=jnp.int32(0),
+        recovery_us=jnp.float32(0.0), n_recovered=jnp.int32(0),
     )
 
 
 def _decide(mode: int, p: SimParams, wl: FlatWorkload, s: SimState,
             tree: DTree, rate_threshold: jax.Array,
-            active=None) -> SimState:
+            active=None, plan=None) -> SimState:
     feats = _features(p, wl, s)
     n = s.ready_cnt.astype(jnp.float32)
     etf_lat = soc.etf_latency_us(n)
     etf_e = etf_lat * soc.SCHED_POWER_W
 
+    def lut():
+        if plan is None:
+            return _lut_choice(p, wl, s)
+        return _lut_choice_degraded(p, wl, s)[:2]
+
+    def etf():
+        if plan is None:
+            return _etf_choice(p, wl, s)
+        return _etf_choice_degraded(p, wl, s)[:2]
+
     if mode == MODE_LUT:
-        slot, pe = _lut_choice(p, wl, s)
+        slot, pe = lut()
         return _assign(p, wl, s, slot, pe, jnp.float32(soc.LUT_LATENCY_US),
                        jnp.float32(soc.LUT_ENERGY_UJ), jnp.int32(0), feats,
-                       jnp.int32(0), active=active)
+                       jnp.int32(0), active=active, plan=plan)
     if mode == MODE_ETF:
-        slot, pe = _etf_choice(p, wl, s)
+        slot, pe = etf()
         return _assign(p, wl, s, slot, pe, etf_lat, etf_e, jnp.int32(1),
-                       feats, jnp.int32(0), active=active)
+                       feats, jnp.int32(0), active=active, plan=plan)
     if mode == MODE_ETF_IDEAL:
-        slot, pe = _etf_choice(p, wl, s)
+        slot, pe = etf()
         return _assign(p, wl, s, slot, pe, jnp.float32(0.0), jnp.float32(0.0),
-                       jnp.int32(1), feats, jnp.int32(0), active=active)
+                       jnp.int32(1), feats, jnp.int32(0), active=active,
+                       plan=plan)
     if mode == MODE_ORACLE:
         # run both, follow the fast one, log whether they agree
-        slot_f, pe_f = _lut_choice(p, wl, s)
-        slot_s, pe_s = _etf_choice(p, wl, s)
+        slot_f, pe_f = lut()
+        slot_s, pe_s = etf()
         agree = ((s.ready_ids[slot_f] == s.ready_ids[slot_s])
                  & (pe_f == pe_s)).astype(jnp.int32)
         return _assign(p, wl, s, slot_f, pe_f,
                        jnp.float32(soc.LUT_LATENCY_US),
                        jnp.float32(soc.LUT_ENERGY_UJ), jnp.int32(0), feats,
-                       agree, active=active)
+                       agree, active=active, plan=plan)
 
     if mode == MODE_DAS:
         use_slow = tree.predict(feats).astype(bool)
@@ -638,19 +988,19 @@ def _decide(mode: int, p: SimParams, wl: FlatWorkload, s: SimState,
     else:  # pragma: no cover
         raise ValueError(f"unknown mode {mode}")
 
-    slot_f, pe_f = _lut_choice(p, wl, s)
-    slot_s, pe_s = _etf_choice(p, wl, s)
+    slot_f, pe_f = lut()
+    slot_s, pe_s = etf()
     slot = jnp.where(use_slow, slot_s, slot_f)
     pe = jnp.where(use_slow, pe_s, pe_f)
     lat = jnp.where(use_slow, etf_lat, jnp.float32(soc.LUT_LATENCY_US))
     e = jnp.where(use_slow, etf_e, jnp.float32(soc.LUT_ENERGY_UJ)) + cls_e
     return _assign(p, wl, s, slot, pe, lat, e, use_slow.astype(jnp.int32),
-                   feats, jnp.int32(0), active=active)
+                   feats, jnp.int32(0), active=active, plan=plan)
 
 
 def _masked_step(mode: int, params: SimParams, s: SimState,
                  wl: FlatWorkload, tree: DTree, rate_threshold: jax.Array,
-                 run: jax.Array):
+                 plan, run: jax.Array):
     """One super-step of gated phases (no `lax.switch`); returns (s, ev).
 
     Phases run in the sequential body's priority order (completion >
@@ -668,31 +1018,56 @@ def _masked_step(mode: int, params: SimParams, s: SimState,
     carry once per branch, which dominated the sweep cost.
     """
     I = wl.inst_arrival.shape[0]
+    if plan is not None:
+        s = s._replace(pe_alive=flt.alive_at(plan, s.now))
     # one two-level search serves completion detection, the completed task
     # index, AND the advance target (the switch path derives all three
     # from status/finish separately — same values, more passes)
     fin_idx, fin_val = _next_completion(s)
     c = run & (fin_val <= s.now)
-    s = _process_completion(params, wl, s, active=c, t=fin_idx)
+    s = _process_completion(params, wl, s, active=c, t=fin_idx, plan=plan)
 
     # a completion tie leaves another completion due: everything below
     # must wait for the next iteration then, exactly as the switch would
     next_fin = s.fin_seg.min()
     no_c = ~(next_fin <= s.now)
 
+    # fault phases (priority: completion > kill > deadline > arrival).
+    # Gates re-derive after each phase, mirroring the sequential 6-way
+    # switch: a second due kill / deadline blocks everything later.
+    k = dl = jnp.array(False)
+    if plan is not None:
+        k_due, k_task, _ = _pending_kill(plan, s)
+        k = run & no_c & k_due
+        s = _process_kill(plan, params, wl, s, k_task, active=k)
+        no_k = ~_pending_kill(plan, s)[0]
+        dl_due, dl_inst = _pending_deadline(plan, wl, s)
+        dl = run & no_c & no_k & dl_due
+        s = _drop_instance(params, wl, s, dl_inst, active=dl)
+        no_dl = ~_pending_deadline(plan, wl, s)[0]
+    else:
+        no_k = no_dl = jnp.array(True)
+
     def arr_due(st):
         return (st.arr_ptr < wl.n_insts) & (
             wl.inst_arrival[jnp.minimum(st.arr_ptr, I - 1)] <= st.now
         )
 
-    a = run & no_c & arr_due(s)
-    s = _process_arrival(params, wl, s, active=a)
+    a = run & no_c & no_k & no_dl & arr_due(s)
+    s = _process_arrival(params, wl, s, active=a, plan=plan)
 
-    # same-timestamp arrivals: the next one blocks the decide phase
+    # same-timestamp arrivals: the next one blocks the decide phase; an
+    # arrival can also arm an already-expired deadline (deadline_us ~ 0)
     no_a = ~arr_due(s)
+    if plan is not None:
+        no_dl = ~_pending_deadline(plan, wl, s)[0]
     can_decide = s.ready_cnt > 0
-    d = run & no_c & no_a & can_decide
-    s = _decide(mode, params, wl, s, tree, rate_threshold, active=d)
+    if plan is not None:
+        can_decide &= _can_schedule(mode, params, wl, s, tree,
+                                    rate_threshold)
+    d = run & no_c & no_k & no_dl & no_a & can_decide
+    s = _decide(mode, params, wl, s, tree, rate_threshold, active=d,
+                plan=plan)
 
     # advance when nothing else can fire *after* this trip's phases: a
     # decide leaves finish > now (exec times are positive), so no
@@ -700,21 +1075,32 @@ def _masked_step(mode: int, params: SimParams, s: SimState,
     # recompute the min. Queue emptiness is post-decide. After the final
     # completion the sequential cond exits without reaching do_advance,
     # hence the n_done guard.
-    next_fin = jnp.where(d, s.fin_seg.min(), next_fin)
-    adv = run & no_c & no_a & (s.ready_cnt == 0) & (s.n_done < wl.n_tasks)
+    if plan is None:
+        next_fin = jnp.where(d, s.fin_seg.min(), next_fin)
+        blocked = s.ready_cnt == 0
+    else:
+        # kills / drops also touched fin_seg — recompute unconditionally
+        next_fin = s.fin_seg.min()
+        blocked = ~((s.ready_cnt > 0) & _can_schedule(
+            mode, params, wl, s, tree, rate_threshold))
+    adv = (run & no_c & no_k & no_dl & no_a & blocked
+           & (s.n_done < wl.n_tasks))
     next_arr = jnp.where(
         s.arr_ptr < wl.n_insts,
         wl.inst_arrival[jnp.minimum(s.arr_ptr, I - 1)], _INF,
     )
     nxt = jnp.minimum(next_fin, next_arr)
+    if plan is not None:
+        nxt = jnp.minimum(nxt, _next_wakeup(plan, wl, s))
     stuck = ~jnp.isfinite(nxt)
     nxt = jnp.where(stuck, s.now, nxt)
     s = s._replace(
         now=jnp.where(adv, jnp.maximum(nxt, s.now), s.now),
         stalled=s.stalled | (adv & stuck),
     )
-    ev = (c.astype(jnp.int32) + a.astype(jnp.int32)
-          + d.astype(jnp.int32) + adv.astype(jnp.int32))
+    ev = (c.astype(jnp.int32) + k.astype(jnp.int32) + dl.astype(jnp.int32)
+          + a.astype(jnp.int32) + d.astype(jnp.int32)
+          + adv.astype(jnp.int32))
     return s, ev
 
 
@@ -724,8 +1110,11 @@ def _finalize(wl: FlatWorkload, s: SimState, iters: jax.Array) -> SimResult:
     inst_fin = jnp.full(I, _NEG).at[wl.inst_id].max(
         jnp.where(wl.task_valid, s.finish, _NEG)
     )
+    # dropped jobs are excluded from the latency mean (they have no
+    # finish); without a FaultPlan `job_dropped` is all-False, so the mask
+    # — and hence the mean — is unchanged bit-for-bit
     inst_exec = jnp.where(
-        wl.inst_valid, inst_fin - wl.inst_arrival, jnp.nan
+        wl.inst_valid & ~s.job_dropped, inst_fin - wl.inst_arrival, jnp.nan
     )
     avg_exec = jnp.nanmean(inst_exec)
     makespan = jnp.where(wl.task_valid, s.finish, _NEG).max()
@@ -752,15 +1141,35 @@ def _finalize(wl: FlatWorkload, s: SimState, iters: jax.Array) -> SimResult:
         log_task=s.log_task,
         finish=s.finish,
         pe_of=s.pe_of,
+        n_faults=s.n_kills,
+        n_retries=s.n_retries,
+        reexec_us=s.reexec_us,
+        n_dropped_jobs=s.job_dropped.sum().astype(jnp.int32),
+        n_dropped_tasks=s.n_dropped_tasks,
+        recovery_us=s.recovery_us,
+        n_recovered=s.n_recovered,
+        job_dropped=s.job_dropped,
     )
 
 
+def _fault_iter_bound(base, T: int, I: int, n_pes: int, plan):
+    """Iteration cap with fault headroom: every retry re-runs up to 4
+    events for its task, each PE contributes at most its transient count
+    plus fail/repair advance stops, and drops/deadlines retire at most one
+    extra event per instance. Traced (depends on `plan.max_retries`)."""
+    return (base + 4 * T * (plan.max_retries + 2)
+            + n_pes * (flt.MAX_TRANSIENTS + 2) + 2 * I + 64)
+
+
 def _simulate_impl(mode: int, params: SimParams, wl: FlatWorkload,
-                   tree: DTree, rate_threshold: jax.Array) -> SimResult:
+                   tree: DTree, rate_threshold: jax.Array,
+                   plan=None) -> SimResult:
     T = wl.task_type.shape[0]
     I = wl.inst_arrival.shape[0]
     n_pes = params.pe_cluster.shape[0]
     max_iters = 3 * T + I + 64
+    if plan is not None:
+        max_iters = _fault_iter_bound(max_iters, T, I, n_pes, plan)
 
     def cond(carry):
         s, it = carry
@@ -768,6 +1177,8 @@ def _simulate_impl(mode: int, params: SimParams, wl: FlatWorkload,
 
     def body(carry):
         s, it = carry
+        if plan is not None:
+            s = s._replace(pe_alive=flt.alive_at(plan, s.now))
         completion_due = s.fin_seg.min() <= s.now
         arrival_due = (s.arr_ptr < wl.n_insts) & (
             wl.inst_arrival[jnp.minimum(s.arr_ptr, I - 1)] <= s.now
@@ -775,13 +1186,14 @@ def _simulate_impl(mode: int, params: SimParams, wl: FlatWorkload,
         can_decide = s.ready_cnt > 0
 
         def do_completion(st):
-            return _process_completion(params, wl, st)
+            return _process_completion(params, wl, st, plan=plan)
 
         def do_arrival(st):
-            return _process_arrival(params, wl, st)
+            return _process_arrival(params, wl, st, plan=plan)
 
         def do_decide(st):
-            return _decide(mode, params, wl, st, tree, rate_threshold)
+            return _decide(mode, params, wl, st, tree, rate_threshold,
+                           plan=plan)
 
         def do_advance(st):
             next_fin = st.fin_seg.min()
@@ -790,6 +1202,8 @@ def _simulate_impl(mode: int, params: SimParams, wl: FlatWorkload,
                 wl.inst_arrival[jnp.minimum(st.arr_ptr, I - 1)], _INF,
             )
             nxt = jnp.minimum(next_fin, next_arr)
+            if plan is not None:
+                nxt = jnp.minimum(nxt, _next_wakeup(plan, wl, st))
             # deadlock guard: nothing running and nothing left to arrive
             # means no event can ever become due again (unschedulable
             # tasks) — flag the stall so `cond` exits instead of spinning
@@ -798,16 +1212,48 @@ def _simulate_impl(mode: int, params: SimParams, wl: FlatWorkload,
             nxt = jnp.where(stuck, st.now, nxt)
             return st._replace(now=jnp.maximum(nxt, st.now), stalled=stuck)
 
+        if plan is None:
+            branch = jnp.where(
+                completion_due, 0,
+                jnp.where(arrival_due, 1, jnp.where(can_decide, 2, 3)),
+            )
+            s = jax.lax.switch(
+                branch, [do_completion, do_arrival, do_decide, do_advance],
+                s,
+            )
+            return (s, it + 1)
+
+        # fault path: six branches, priority completion > kill > deadline
+        # > arrival > decide > advance; a decision additionally requires
+        # the chosen scheduler to have a feasible (task, PE) pair
+        k_due, k_task, _ = _pending_kill(plan, s)
+        dl_due, dl_inst = _pending_deadline(plan, wl, s)
+        can_decide &= _can_schedule(mode, params, wl, s, tree,
+                                    rate_threshold)
+
+        def do_kill(st):
+            return _process_kill(plan, params, wl, st, k_task)
+
+        def do_deadline(st):
+            return _drop_instance(params, wl, st, dl_inst)
+
         branch = jnp.where(
             completion_due, 0,
-            jnp.where(arrival_due, 1, jnp.where(can_decide, 2, 3)),
+            jnp.where(k_due, 1,
+                      jnp.where(dl_due, 2,
+                                jnp.where(arrival_due, 3,
+                                          jnp.where(can_decide, 4, 5)))),
         )
         s = jax.lax.switch(
-            branch, [do_completion, do_arrival, do_decide, do_advance], s
+            branch,
+            [do_completion, do_kill, do_deadline, do_arrival, do_decide,
+             do_advance], s,
         )
         return (s, it + 1)
 
-    s0 = _init_state(wl, n_pes)
+    pe_slow = None if plan is None \
+        else flt.pe_slowdown(plan, params.pe_cluster)
+    s0 = _init_state(wl, n_pes, pe_slow)
     s, iters = jax.lax.while_loop(cond, body, (s0, jnp.int32(0)))
     return _finalize(wl, s, iters)
 
@@ -816,12 +1262,14 @@ def _simulate_impl(mode: int, params: SimParams, wl: FlatWorkload,
 # traced. Returns a `SimResult` of scalars plus per-task/per-decision logs.
 # The single-scenario path keeps the `lax.switch` body: unbatched, a switch
 # runs only the taken branch, which beats the masked step's always-on phases.
+# `plan=None` vs a `FaultPlan` changes the pytree structure, so each case
+# compiles separately and the no-plan trace is untouched by the fault layer.
 simulate = jax.jit(_simulate_impl, static_argnums=(0,))
 
 
-@functools.partial(jax.jit, static_argnums=(0, 5, 6))
-def _simulate_batch(mode, params, wls, tree, rate_threshold,
-                    tree_axis, thr_axis):
+@functools.partial(jax.jit, static_argnums=(0, 6, 7, 8))
+def _simulate_batch(mode, params, wls, tree, rate_threshold, plan,
+                    tree_axis, thr_axis, plan_axis):
     # One while loop over explicitly-batched state, vmapping only the
     # per-iteration step. Deliberately NOT `vmap(_simulate_impl)`: batching
     # a `while_loop` makes its cond per-lane, and the batching rule then
@@ -834,10 +1282,13 @@ def _simulate_batch(mode, params, wls, tree, rate_threshold,
     I = wls.inst_arrival.shape[1]
     n_pes = params.pe_cluster.shape[0]
     max_iters = 3 * T + I + 64
+    if plan is not None:
+        # [S] when the plan is batched; `it < max_iters` is elementwise
+        max_iters = _fault_iter_bound(max_iters, T, I, n_pes, plan)
 
     step = jax.vmap(
         functools.partial(_masked_step, mode, params),
-        in_axes=(0, 0, tree_axis, thr_axis, 0),
+        in_axes=(0, 0, tree_axis, thr_axis, plan_axis, 0),
     )
 
     def running(s, it):
@@ -850,35 +1301,46 @@ def _simulate_batch(mode, params, wls, tree, rate_threshold,
     def body(carry):
         s, it = carry
         run = running(s, it)
-        s, ev = step(s, wls, tree, rate_threshold, run)
+        s, ev = step(s, wls, tree, rate_threshold, plan, run)
         # it counts retired *events*, matching the sequential n_iters
-        # (a super-step can retire up to 4). A lane within 3 of max_iters
-        # may overshoot the cap by a couple of events; max_iters is a
-        # pathology backstop, so the slack is irrelevant in practice.
+        # (a super-step can retire up to 4, or 6 with faults). A lane
+        # within a few of max_iters may overshoot the cap by a couple of
+        # events; max_iters is a pathology backstop, so the slack is
+        # irrelevant in practice.
         return (s, it + ev)
 
-    s0 = jax.vmap(_init_state, in_axes=(0, None))(wls, n_pes)
+    if plan is None:
+        pe_slow, slow_axis = None, None
+    else:
+        pe_slow = plan.cluster_slowdown[..., params.pe_cluster]
+        slow_axis = 0 if pe_slow.ndim == 2 else None
+    s0 = jax.vmap(_init_state, in_axes=(0, None, slow_axis))(
+        wls, n_pes, pe_slow)
     s, iters = jax.lax.while_loop(cond, body,
                                   (s0, jnp.zeros(S, jnp.int32)))
     return jax.vmap(_finalize)(wls, s, iters)
 
 
 def simulate_batch(mode: int, params: SimParams, wls: FlatWorkload,
-                   tree: DTree, rate_threshold: jax.Array) -> SimResult:
+                   tree: DTree, rate_threshold: jax.Array,
+                   plan=None) -> SimResult:
     """`jax.vmap` of `simulate` over a leading scenario axis.
 
     `wls` is a stacked workload (`workloads.stack_workloads`): every field
     carries a leading `[S]` axis. `params` and `mode` are shared across
     scenarios. `tree` and `rate_threshold` are broadcast when unbatched, or
     swept per-scenario when given a leading `[S]` axis (threshold sweeps,
-    per-scenario DAS trees). Returns a `SimResult` whose every field has a
+    per-scenario DAS trees). `plan` batches the same way: a single
+    `faults.FaultPlan` is shared, `faults.stack_plans` sweeps one fault
+    scenario per lane. Returns a `SimResult` whose every field has a
     leading `[S]` axis; scenario results are bit-identical to running
-    `simulate` one scenario at a time on CPU.
+    `simulate` one scenario at a time on CPU — with or without faults.
     """
     tree_axis = 0 if tree.feat.ndim == 2 else None
     thr_axis = 0 if getattr(rate_threshold, "ndim", 0) >= 1 else None
-    return _simulate_batch(mode, params, wls, tree, rate_threshold,
-                           tree_axis, thr_axis)
+    plan_axis = 0 if plan is not None and plan.pe_fail_at.ndim == 2 else None
+    return _simulate_batch(mode, params, wls, tree, rate_threshold, plan,
+                           tree_axis, thr_axis, plan_axis)
 
 
 def to_device(wl: FlatWorkload) -> FlatWorkload:
@@ -890,29 +1352,46 @@ def result_at(res: SimResult, i: int) -> SimResult:
     return jax.tree_util.tree_map(lambda x: x[i], res)
 
 
+def _prep_plan(plan, params: SimParams, batched: bool):
+    """Validate a user-supplied FaultPlan and move it to device arrays."""
+    if plan is None:
+        return None
+    plan = flt.validate_plan(plan, n_pes=params.pe_cluster.shape[0],
+                             n_clusters=params.cluster_pe_mask.shape[0])
+    if not batched and flt.is_batched(plan):
+        raise ValueError("run: got a batched FaultPlan (leading scenario "
+                         "axis); use run_batch for plan sweeps")
+    return flt.FaultPlan(*[jnp.asarray(x) for x in plan])
+
+
 def run(mode: int, wl: FlatWorkload, params: SimParams | None = None,
         tree: DTree | None = None,
-        rate_threshold: float = 1e9) -> SimResult:
-    """Convenience wrapper (host-side numpy workload ok)."""
+        rate_threshold: float = 1e9,
+        plan=None) -> SimResult:
+    """Convenience wrapper (host-side numpy workload ok). `plan` threads
+    an optional `faults.FaultPlan` through the simulation."""
     params = params or make_params()
     tree = tree or always_fast_tree()
+    plan = _prep_plan(plan, params, batched=False)
     return simulate(mode, params, to_device(wl), tree,
-                    jnp.float32(rate_threshold))
+                    jnp.float32(rate_threshold), plan)
 
 
 def run_batch(mode: int, wls, params: SimParams | None = None,
               tree: DTree | None = None,
               rate_threshold=1e9,
-              batch_size: int | None = None) -> SimResult:
+              batch_size: int | None = None,
+              plan=None) -> SimResult:
     """Batched convenience wrapper over a scenario axis.
 
     `wls` is either a list of same-shape `FlatWorkload`s or an
     already-stacked workload (leading `[S]` axis on every field).
     `batch_size` chunks the scenario axis (sequential vmapped chunks) so
     peak memory stays bounded on large sweeps — benchmarks wire it to the
-    `REPRO_BENCH_BATCH` env knob. `tree` / `rate_threshold` may carry a
-    leading `[S]` axis to vary per scenario; chunking slices them along
-    with the workloads. Results are independent of `batch_size`.
+    `REPRO_BENCH_BATCH` env knob. `tree` / `rate_threshold` /
+    `plan` (a `faults.FaultPlan`, batched via `faults.stack_plans`) may
+    carry a leading `[S]` axis to vary per scenario; chunking slices them
+    along with the workloads. Results are independent of `batch_size`.
     """
     from repro.core.workloads import stack_workloads
 
@@ -920,16 +1399,23 @@ def run_batch(mode: int, wls, params: SimParams | None = None,
         raise ValueError(f"batch_size must be positive, got {batch_size}")
     params = params or make_params()
     tree = tree or always_fast_tree()
+    plan = _prep_plan(plan, params, batched=True)
     if isinstance(wls, FlatWorkload):
         stacked = wls
     else:
         stacked = stack_workloads(wls)
     stacked = to_device(stacked)
     n = stacked.task_type.shape[0]
+    plan_b = plan is not None and flt.is_batched(plan)
+    if plan_b and plan.pe_fail_at.shape[0] != n:
+        raise ValueError(
+            f"run_batch: batched plan has {plan.pe_fail_at.shape[0]} "
+            f"scenarios but the workload has {n}")
     if not isinstance(rate_threshold, jax.Array):
         rate_threshold = jnp.float32(rate_threshold)
     if batch_size is None or batch_size >= n:
-        return simulate_batch(mode, params, stacked, tree, rate_threshold)
+        return simulate_batch(mode, params, stacked, tree, rate_threshold,
+                              plan)
 
     tree_b = tree.feat.ndim == 2
     thr_b = rate_threshold.ndim >= 1
@@ -940,6 +1426,8 @@ def run_batch(mode: int, wls, params: SimParams | None = None,
         t = jax.tree_util.tree_map(lambda x: x[lo:hi], tree) if tree_b \
             else tree
         rt = rate_threshold[lo:hi] if thr_b else rate_threshold
-        chunks.append(simulate_batch(mode, params, part, t, rt))
+        pl = jax.tree_util.tree_map(lambda x: x[lo:hi], plan) if plan_b \
+            else plan
+        chunks.append(simulate_batch(mode, params, part, t, rt, pl))
     return jax.tree_util.tree_map(
         lambda *xs: jnp.concatenate(xs, axis=0), *chunks)

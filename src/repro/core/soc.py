@@ -8,7 +8,8 @@ Exact DS3 task profiles are not published in the paper; the tables below are
 synthesized to match the paper's premises (accelerated tasks run 1-2 orders of
 magnitude faster on their accelerator than on general-purpose cores; LITTLE is
 the energy-efficient CPU; big is the fast CPU). All times are microseconds,
-power in watts, energy in microjoules. See DESIGN.md section 8.
+power in watts, energy in microjoules. See DESIGN.md, "Hardware model
+calibration".
 """
 from __future__ import annotations
 
@@ -61,7 +62,7 @@ N_TASK_TYPES = len(TASK_TYPE_NAMES)
 _INF = np.float32(np.inf)
 
 # exec time (us) per [task_type, cluster]; inf = cluster cannot run the type.
-# CPUs (big, LITTLE) can run everything. Calibration (see DESIGN.md #8):
+# CPUs (big, LITTLE) can run everything. Calibration (see DESIGN.md):
 # accelerated kernels are sub-microsecond on their accelerator (the paper's
 # "order of nanoseconds" premise), 30-80x slower on CPUs; the small
 # control-plane tasks are near-parity between big and LITTLE (so the
@@ -156,6 +157,54 @@ class SoCConfig:
     def exec_on_pe(self) -> np.ndarray:
         """[task_type, pe] execution-time table."""
         return self.exec_time[:, self.pe_cluster]
+
+
+def validate_config(cfg: SoCConfig) -> SoCConfig:
+    """Sanity-check a hardware model before it reaches the jitted simulator
+    (a malformed table there turns into NaN results, not errors)."""
+    pe_cluster = np.asarray(cfg.pe_cluster)
+    mask = np.asarray(cfg.cluster_pe_mask)
+    exec_t = np.asarray(cfg.exec_time)
+    power = np.asarray(cfg.cluster_power)
+    energy = np.asarray(cfg.task_energy)
+    lut = np.asarray(cfg.lut_cluster)
+    if pe_cluster.shape != (cfg.n_pes,):
+        raise ValueError(
+            f"SoCConfig: pe_cluster shape {pe_cluster.shape} != ({cfg.n_pes},)")
+    if ((pe_cluster < 0) | (pe_cluster >= cfg.n_clusters)).any():
+        raise ValueError("SoCConfig: pe_cluster entries out of range")
+    if mask.shape != (cfg.n_clusters, cfg.n_pes):
+        raise ValueError(
+            f"SoCConfig: cluster_pe_mask shape {mask.shape} != "
+            f"({cfg.n_clusters}, {cfg.n_pes})")
+    if not (mask.sum(axis=0) == 1).all():
+        raise ValueError("SoCConfig: every PE must belong to exactly one "
+                         "cluster in cluster_pe_mask")
+    for name, table in (("exec_time", exec_t), ("task_energy", energy)):
+        if table.shape != (cfg.n_task_types, cfg.n_clusters):
+            raise ValueError(
+                f"SoCConfig: {name} shape {table.shape} != "
+                f"({cfg.n_task_types}, {cfg.n_clusters})")
+        if np.isnan(table).any():
+            raise ValueError(f"SoCConfig: {name} contains NaN")
+        if (table[np.isfinite(table)] <= 0).any():
+            raise ValueError(f"SoCConfig: {name} entries must be positive "
+                             "(inf = cannot run)")
+    if not np.isfinite(exec_t).any(axis=1).all():
+        raise ValueError("SoCConfig: some task type cannot run anywhere")
+    if power.shape != (cfg.n_clusters,) or (power <= 0).any() \
+            or np.isnan(power).any():
+        raise ValueError("SoCConfig: cluster_power must be positive, "
+                         f"shape ({cfg.n_clusters},)")
+    if lut.shape != (cfg.n_task_types,) \
+            or ((lut < 0) | (lut >= cfg.n_clusters)).any():
+        raise ValueError("SoCConfig: lut_cluster entries out of range")
+    if not np.isfinite(exec_t[np.arange(cfg.n_task_types), lut]).all():
+        raise ValueError("SoCConfig: lut_cluster points a task type at a "
+                         "cluster that cannot run it")
+    if not (np.isfinite(cfg.us_per_kb) and cfg.us_per_kb >= 0):
+        raise ValueError("SoCConfig: us_per_kb must be finite and >= 0")
+    return cfg
 
 
 def default_soc() -> SoCConfig:

@@ -181,7 +181,7 @@ def build_workload(
         inst_valid[i] = True
         cursor += n
 
-    return FlatWorkload(
+    return validate_workload(FlatWorkload(
         task_type=task_type, inst_id=inst_id, app_id=app_id, depth=depth,
         out_kb=out_kb, preds=preds, n_preds=n_preds, succs=succs,
         n_succs=n_succs, task_valid=task_valid, inst_arrival=inst_arrival,
@@ -190,7 +190,66 @@ def build_workload(
         inst_n_roots=inst_n_roots, inst_valid=inst_valid,
         n_tasks=np.int32(cursor), n_insts=np.int32(n_instances),
         rate_mbps=np.float32(rate_mbps),
-    )
+    ))
+
+
+def validate_workload(wl: FlatWorkload) -> FlatWorkload:
+    """Build-time sanity checks; a malformed workload inside the jitted
+    simulator produces NaN results or a silent stall, not an error, so
+    fail loudly here instead."""
+    from repro.core import soc
+
+    T = int(wl.n_tasks)
+    I = int(wl.n_insts)
+    Tp = wl.task_type.shape[0]
+    if T < 0 or T > Tp or not wl.task_valid[:T].all() \
+            or wl.task_valid[T:].any():
+        raise ValueError(
+            f"FlatWorkload: task_valid must be a prefix of length "
+            f"n_tasks={T} (padded to {Tp})")
+    if I < 0 or I > wl.inst_valid.shape[0] or not wl.inst_valid[:I].all() \
+            or wl.inst_valid[I:].any():
+        raise ValueError(
+            f"FlatWorkload: inst_valid must be a prefix of length "
+            f"n_insts={I}")
+    tt = wl.task_type[:T]
+    if ((tt < 0) | (tt >= soc.N_TASK_TYPES)).any():
+        bad = np.where((tt < 0) | (tt >= soc.N_TASK_TYPES))[0][:5]
+        raise ValueError(
+            f"FlatWorkload: task_type out of range [0, {soc.N_TASK_TYPES}) "
+            f"at tasks {bad.tolist()}")
+    kb = wl.out_kb[:T]
+    if np.isnan(kb).any() or (kb < 0).any() or np.isinf(kb).any():
+        raise ValueError("FlatWorkload: out_kb must be finite and >= 0")
+    arr = wl.inst_arrival[:I]
+    if np.isnan(arr).any() or (arr < 0).any() or np.isinf(arr).any():
+        raise ValueError(
+            "FlatWorkload: inst_arrival must be finite and >= 0")
+    if ((wl.inst_id[:T] < 0) | (wl.inst_id[:T] >= max(I, 1))).any():
+        raise ValueError("FlatWorkload: inst_id out of range")
+    for name, idx, cnt in (("preds", wl.preds, wl.n_preds),
+                           ("succs", wl.succs, wl.n_succs)):
+        k = np.arange(idx.shape[1])[None, :]
+        valid = k < cnt[:T, None]
+        v = idx[:T]
+        if ((cnt[:T] < 0) | (cnt[:T] > idx.shape[1])).any():
+            raise ValueError(f"FlatWorkload: n_{name} out of range")
+        if (valid & ((v < 0) | (v >= T))).any():
+            raise ValueError(f"FlatWorkload: {name} index out of range")
+    # acyclicity: the flattened ids are a topological order by
+    # construction, so every predecessor must precede its consumer — a
+    # cycle cannot satisfy that for all of its edges
+    k = np.arange(wl.preds.shape[1])[None, :]
+    pvalid = k < wl.n_preds[:T, None]
+    tasks = np.arange(T)[:, None]
+    if (pvalid & (wl.preds[:T] >= tasks)).any():
+        bad = np.where((pvalid & (wl.preds[:T] >= tasks)).any(axis=1))[0][:5]
+        raise ValueError(
+            f"FlatWorkload: dependency cycle or forward pred edge at tasks "
+            f"{bad.tolist()} (predecessor id >= task id)")
+    if not (np.isfinite(wl.rate_mbps) and wl.rate_mbps > 0):
+        raise ValueError("FlatWorkload: rate_mbps must be finite and > 0")
+    return wl
 
 
 def stack_workloads(wls: Sequence[FlatWorkload]) -> FlatWorkload:

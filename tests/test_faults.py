@@ -1,0 +1,288 @@
+"""Fault injection, retry and graceful degradation (PR-7 tentpole).
+
+Invariants under a `faults.FaultPlan`:
+  * the healthy plan is the identity — bit-identical results to running
+    without a plan, for every scheduler mode;
+  * a fully-dead accelerator cluster degrades its task types to the CPU
+    clusters and every job still completes;
+  * retry exhaustion and per-job deadlines drop jobs instead of stalling,
+    with consistent accounting;
+  * the batched (vmapped) path is bit-exact with per-scenario `sim.run`
+    when plans ride the scenario axis;
+  * no completed task ever occupies a PE inside its dead window
+    (hypothesis property, skips without the package);
+  * the independent float64 reference simulator agrees under faults.
+"""
+import numpy as np
+import pytest
+
+from hyp_compat import hypothesis, st
+from repro.core import faults, ref_sim, simulator as sim, soc, workloads
+
+PARAMS = sim.make_params()
+SUITE = workloads.default_suite(n_instances=8)
+WL = SUITE.build(5, 6)
+
+ALL_MODES = [sim.MODE_LUT, sim.MODE_ETF, sim.MODE_ETF_IDEAL, sim.MODE_DAS,
+             sim.MODE_ORACLE, sim.MODE_THRESHOLD]
+# fields that exist without fault injection (must be plan-invariant)
+BASE_FIELDS = sim.SimResult._fields[:21]
+FAULT_COUNTERS = ("n_faults", "n_retries", "reexec_us", "n_dropped_jobs",
+                  "n_dropped_tasks", "recovery_us", "n_recovered")
+
+FFT_PES = np.where(soc.PE_CLUSTER == soc.FFT_ACC)[0]
+FFT_TYPES = [i for i, n in enumerate(soc.TASK_TYPE_NAMES)
+             if n in ("fft", "ifft")]
+
+
+def _tree():
+    import jax.numpy as jnp
+    return sim.DTree(feat=jnp.array([sim.FEAT_RATE, 1, 1], jnp.int32),
+                     thr=jnp.array([500.0, 4.0, 6.0], jnp.float32),
+                     leaf=jnp.array([0, 1, 0, 1], jnp.int32))
+
+
+def _assert_results_equal(a, b, fields=sim.SimResult._fields):
+    for name in fields:
+        va, vb = np.asarray(getattr(a, name)), np.asarray(getattr(b, name))
+        assert np.array_equal(va, vb, equal_nan=True), name
+
+
+# ---------------------------------------------------------------------------
+# healthy plan == no plan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", ALL_MODES)
+def test_healthy_plan_is_identity(mode):
+    kw = {"tree": _tree()} if mode == sim.MODE_DAS else {}
+    if mode == sim.MODE_THRESHOLD:
+        kw["rate_threshold"] = 600.0
+    r0 = sim.run(mode, WL, PARAMS, **kw)
+    r1 = sim.run(mode, WL, PARAMS, plan=faults.healthy_plan(), **kw)
+    _assert_results_equal(r0, r1, BASE_FIELDS)
+    for name in FAULT_COUNTERS:
+        assert float(np.asarray(getattr(r1, name))) == 0.0, name
+    assert not np.asarray(r1.job_dropped).any()
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation: dead accelerator cluster -> CPU fallback
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", [sim.MODE_LUT, sim.MODE_ETF, sim.MODE_DAS])
+def test_dead_fft_cluster_degrades_to_cpu(mode):
+    plan = faults.fail_cluster(faults.healthy_plan(), soc.FFT_ACC, at=0.0)
+    kw = {"tree": _tree()} if mode == sim.MODE_DAS else {}
+    r = sim.run(mode, WL, PARAMS, plan=plan, **kw)
+    healthy = sim.run(mode, WL, PARAMS, **kw)
+    assert int(r.n_done) == int(WL.n_tasks)
+    assert not bool(r.stalled)
+    assert int(r.n_dropped_jobs) == 0
+    pe_of = np.asarray(r.pe_of)[: int(WL.n_tasks)]
+    assert not np.isin(pe_of, FFT_PES).any(), "task placed on a dead PE"
+    tt = np.asarray(WL.task_type)[: int(WL.n_tasks)]
+    fft_tasks = np.isin(tt, FFT_TYPES)
+    assert fft_tasks.any()
+    # fft work fell back to the CPU clusters => strictly slower on average
+    assert float(r.avg_exec_us) > float(healthy.avg_exec_us)
+
+
+def test_cluster_slowdown_stretches_exec():
+    plan = faults.slow_cluster(faults.healthy_plan(), soc.LITTLE, 3.0)
+    r = sim.run(sim.MODE_LUT, WL, PARAMS, plan=plan)
+    healthy = sim.run(sim.MODE_LUT, WL, PARAMS)
+    assert int(r.n_done) == int(WL.n_tasks)
+    assert float(r.avg_exec_us) > float(healthy.avg_exec_us)
+
+
+# ---------------------------------------------------------------------------
+# retries, exhaustion, deadlines
+# ---------------------------------------------------------------------------
+def _transient_storm(times, pes=None, retries=0):
+    plan = faults.with_retries(faults.healthy_plan(), retries)
+    for pe in (range(soc.N_PES) if pes is None else pes):
+        for t in times:
+            plan = faults.add_transient(plan, int(pe), float(t))
+    return plan
+
+
+def test_transient_kills_and_recovers():
+    plan = _transient_storm([1.0, 3.0], retries=4)
+    r = sim.run(sim.MODE_ETF, WL, PARAMS, plan=plan)
+    assert int(r.n_done) == int(WL.n_tasks)
+    assert not bool(r.stalled)
+    assert int(r.n_faults) > 0
+    assert int(r.n_retries) == int(r.n_faults)  # budget never exhausted
+    assert int(r.n_dropped_jobs) == 0
+    assert int(r.n_recovered) > 0
+    assert float(r.recovery_us) > 0
+    assert float(r.reexec_us) >= 0
+
+
+def test_retry_exhaustion_drops_jobs_and_terminates():
+    plan = _transient_storm([1.0, 3.0], retries=0)
+    r = sim.run(sim.MODE_ETF, WL, PARAMS, plan=plan)
+    # every kill immediately exhausts the zero budget -> job drops
+    assert int(r.n_faults) > 0
+    assert int(r.n_retries) == 0
+    assert int(r.n_dropped_jobs) > 0
+    assert int(r.n_dropped_tasks) >= int(r.n_dropped_jobs)
+    assert not bool(r.stalled)
+    # dropped tasks count toward termination: the loop converges
+    assert int(r.n_done) == int(WL.n_tasks)
+    assert int(np.asarray(r.job_dropped).sum()) == int(r.n_dropped_jobs)
+
+
+def test_deadline_drops_late_jobs():
+    plan = faults.with_deadline(faults.healthy_plan(), 2.0)
+    r = sim.run(sim.MODE_LUT, WL, PARAMS, plan=plan)
+    assert int(r.n_dropped_jobs) > 0
+    assert not bool(r.stalled)
+    assert int(r.n_done) == int(WL.n_tasks)
+    # dropped instances are excluded from the latency average
+    inst = np.asarray(r.inst_exec_us)[: int(WL.n_insts)]
+    dropped = np.asarray(r.job_dropped)[: int(WL.n_insts)]
+    assert np.isnan(inst[dropped]).all()
+    kept = inst[~dropped]
+    if kept.size:
+        assert np.isfinite(kept).all()
+        assert (kept <= 2.0 + 1e-3).all()
+
+
+# ---------------------------------------------------------------------------
+# batched path bit-exactness under plans
+# ---------------------------------------------------------------------------
+PLANS = [
+    faults.healthy_plan(),
+    faults.fail_cluster(faults.healthy_plan(), soc.FFT_ACC, 0.0),
+    faults.fail_pes(faults.with_retries(faults.healthy_plan(), 2),
+                    [0, 8, 12], 2.0, repair_at=6.0),
+    faults.with_deadline(
+        faults.slow_cluster(faults.healthy_plan(), soc.BIG, 2.0), 40.0),
+]
+
+
+@pytest.mark.parametrize("mode", [sim.MODE_LUT, sim.MODE_ETF, sim.MODE_DAS])
+def test_batched_matches_sequential_with_stacked_plans(mode):
+    cells = [(0, 3), (5, 6), (5, 13), (1, 9)]
+    wls = [SUITE.build(mi, ri) for mi, ri in cells]
+    kw = {"tree": _tree()} if mode == sim.MODE_DAS else {}
+    batched = sim.run_batch(mode, workloads.stack_workloads(wls), PARAMS,
+                            plan=faults.stack_plans(PLANS), **kw)
+    for k, (wl, plan) in enumerate(zip(wls, PLANS)):
+        seq = sim.run(mode, wl, PARAMS, plan=plan, **kw)
+        _assert_results_equal(sim.result_at(batched, k), seq)
+
+
+def test_batched_shared_plan_and_chunking():
+    plan = PLANS[2]
+    wls = [SUITE.build(5, ri) for ri in (0, 4, 8, 13)]
+    stacked = workloads.stack_workloads(wls)
+    full = sim.run_batch(sim.MODE_ETF, stacked, PARAMS, plan=plan)
+    chunked = sim.run_batch(sim.MODE_ETF, stacked, PARAMS, plan=plan,
+                            batch_size=2)
+    _assert_results_equal(full, chunked)
+    for k, wl in enumerate(wls):
+        seq = sim.run(sim.MODE_ETF, wl, PARAMS, plan=plan)
+        _assert_results_equal(sim.result_at(full, k), seq)
+
+
+# ---------------------------------------------------------------------------
+# property: the availability mask is always respected
+# ---------------------------------------------------------------------------
+@hypothesis.settings(max_examples=10, deadline=None)
+@hypothesis.given(st.integers(min_value=0, max_value=10_000))
+def test_completed_tasks_never_occupy_dead_pes(seed):
+    """No completed task's final run [start, finish) may overlap its PE's
+    dead window [fail_at, repair_at)."""
+    plan = faults.random_plan(seed, n_fail=3, n_transient=4,
+                              t_horizon_us=60.0, max_retries=3)
+    r = sim.run(sim.MODE_ETF, WL, PARAMS, plan=plan)
+    assert not bool(r.stalled)
+    nt = int(WL.n_tasks)
+    done = np.asarray(r.finish)[:nt] > -np.inf
+    done &= ~np.asarray(r.job_dropped)[np.asarray(WL.inst_id)[:nt]]
+    pe_of = np.asarray(r.pe_of)[:nt]
+    tt = np.asarray(WL.task_type)[:nt]
+    exec_pe = np.asarray(PARAMS.exec_pe)  # slowdown is 1.0 in random_plan
+    finish = np.asarray(r.finish)[:nt]
+    start = finish - exec_pe[tt, np.clip(pe_of, 0, None)]
+    fail = np.asarray(plan.pe_fail_at)[np.clip(pe_of, 0, None)]
+    repair = np.asarray(plan.pe_repair_at)[np.clip(pe_of, 0, None)]
+    overlap = done & (start < repair) & (fail < finish - 1e-6)
+    assert not overlap.any(), np.where(overlap)[0][:5]
+
+
+# ---------------------------------------------------------------------------
+# reference-simulator differential under faults
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", [sim.MODE_LUT, sim.MODE_ETF])
+@pytest.mark.parametrize("plan_idx", [1, 2])
+def test_reference_sim_agrees_under_faults(mode, plan_idx):
+    plan = PLANS[plan_idx]
+    r_jax = sim.run(mode, WL, PARAMS, plan=plan)
+    r_ref = ref_sim.simulate_ref(mode, WL, plan=plan)
+    assert int(r_jax.n_done) == r_ref["n_done"]
+    for name in ("n_faults", "n_retries", "n_dropped_jobs",
+                 "n_dropped_tasks", "n_recovered"):
+        assert int(np.asarray(getattr(r_jax, name))) == r_ref[name], name
+    nt = int(WL.n_tasks)
+    fin_jax = np.asarray(r_jax.finish)[:nt]
+    fin_ref = r_ref["finish"][:nt]
+    ok = np.isfinite(fin_jax) & np.isfinite(fin_ref)
+    diff = np.abs(fin_jax[ok] - fin_ref[ok])
+    assert (diff <= 1e-3 * max(1.0, float(np.abs(fin_ref[ok]).max()))
+            ).mean() >= 0.98
+    assert float(r_jax.avg_exec_us) == pytest.approx(
+        r_ref["avg_exec_us"], rel=1e-3, abs=1e-3, nan_ok=True)
+
+
+# ---------------------------------------------------------------------------
+# validation errors
+# ---------------------------------------------------------------------------
+def test_validate_plan_rejects_malformed():
+    with pytest.raises(ValueError, match="repair"):
+        faults.validate_plan(faults.fail_pes(
+            faults.healthy_plan(), [0], at=5.0, repair_at=1.0))
+    with pytest.raises(ValueError, match="slowdown"):
+        faults.validate_plan(faults.slow_cluster(
+            faults.healthy_plan(), soc.BIG, 0.5))
+    with pytest.raises(ValueError, match="max_retries"):
+        faults.validate_plan(faults.with_retries(faults.healthy_plan(), -1))
+    with pytest.raises(ValueError, match="trailing dim"):
+        faults.validate_plan(faults.healthy_plan(n_pes=7))
+    # run() rejects a batched plan; run_batch rejects a mis-sized one
+    stacked = faults.stack_plans([faults.healthy_plan()] * 2)
+    with pytest.raises(ValueError):
+        sim.run(sim.MODE_LUT, WL, PARAMS, plan=stacked)
+    with pytest.raises(ValueError):
+        sim.run_batch(sim.MODE_LUT,
+                      workloads.stack_workloads([WL, WL, WL]),
+                      PARAMS, plan=stacked)
+
+
+def test_validate_workload_rejects_malformed():
+    wl = SUITE.build(0, 0)
+    tt = np.array(wl.task_type)
+    tt[2] = soc.N_TASK_TYPES
+    with pytest.raises(ValueError, match="task_type"):
+        workloads.validate_workload(wl._replace(task_type=tt))
+    kb = np.array(wl.out_kb)
+    kb[1] = -1.0
+    with pytest.raises(ValueError, match="out_kb"):
+        workloads.validate_workload(wl._replace(out_kb=kb))
+    pr, npred = np.array(wl.preds), np.array(wl.n_preds)
+    pr[1, 0], npred[1] = 1, 1  # self-dependency = 1-cycle
+    with pytest.raises(ValueError, match="cycle"):
+        workloads.validate_workload(wl._replace(preds=pr, n_preds=npred))
+
+
+def test_validate_config_rejects_malformed():
+    import dataclasses
+    cfg = soc.default_soc()
+    bad_lut = np.array(cfg.lut_cluster)
+    bad_lut[0] = soc.FFT_ACC  # scrambler cannot run on the FFT accelerator
+    with pytest.raises(ValueError, match="lut_cluster"):
+        soc.validate_config(dataclasses.replace(cfg, lut_cluster=bad_lut))
+    bad_power = np.array(cfg.cluster_power)
+    bad_power[0] = -1.0
+    with pytest.raises(ValueError, match="cluster_power"):
+        soc.validate_config(dataclasses.replace(cfg, cluster_power=bad_power))
