@@ -3,15 +3,27 @@ suite and scheduler evaluation helpers. Results are cached in-process so
 `benchmarks.run` trains the classifier once.
 
 All (mix x rate) sweeps — oracle generation and the per-mode evaluation
-grids — go through the batched simulator path (`sim.run_batch`, one
-`jax.vmap`ed call per mode instead of one `sim.run` per cell).
+grids — go through the sharded batched simulator path (`sim.run_batch`,
+one fixed-shape-chunked, device-sharded sweep per mode instead of one
+`sim.run` per cell).
 
 Environment knobs:
   REPRO_BENCH_INSTANCES  frames per workload (default 60)
-  REPRO_BENCH_FULL=1     train/eval on the full 40 mixes x 14 rates grid
+  REPRO_BENCH_FULL=0     opt OUT of the paper's full 40 mixes x 14 rates
+                         grid back to the 10x8 training subset (the full
+                         grid is the default since the sweep went
+                         sharded + streaming)
   REPRO_BENCH_BATCH      scenario-axis chunk size for batched sweeps
-                         (default 16; bounds peak memory, results are
-                         independent of the value)
+                         (bounds peak memory, results are independent of
+                         the value). Unset, it is autotuned once per
+                         process by `batch_size()`: a small timed probe
+                         over a backend-keyed candidate ladder (the
+                         vmapped `lax.switch`/straggler crossover differs
+                         between CPU and accelerators).
+  REPRO_BENCH_DEVICES    number of devices `sim.run_batch` shards the
+                         scenario axis over (default: all of
+                         `jax.devices()`); per-scenario results are
+                         independent of the device count
 """
 from __future__ import annotations
 
@@ -41,14 +53,52 @@ def _env_int(name: str, default: int) -> int:
 
 
 N_INSTANCES = _env_int("REPRO_BENCH_INSTANCES", 60)
-# training scenarios: a representative subset (all 40 x 14 in the full run,
-# REPRO_BENCH_FULL=1)
-FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
-# scenario-axis chunk size for run_batch (memory bound, not a result knob)
-BATCH = _env_int("REPRO_BENCH_BATCH", 16)
+# the paper's full 40 x 14 grid is the default; REPRO_BENCH_FULL=0 opts
+# back out to the representative 10 x 8 training subset
+FULL = os.environ.get("REPRO_BENCH_FULL", "1") != "0"
 
 TRAIN_MIXES = list(range(40)) if FULL else [0, 1, 2, 3, 4, 5, 8, 12, 17, 22]
 TRAIN_RATES = list(range(14)) if FULL else [0, 3, 5, 7, 9, 11, 12, 13]
+
+# scenario-axis chunk size candidates for the autotune probe: batching
+# trades per-iteration overhead (a vmapped masked step pays every phase
+# for every lane) against straggler coupling (a chunk runs to its slowest
+# lane); the crossover differs by backend, so the ladders do too.
+_BATCH_CANDIDATES = {"cpu": (8, 16, 32)}
+_BATCH_DEFAULT_CANDIDATES = (16, 32, 64, 128)
+
+
+@functools.lru_cache()
+def batch_size() -> int:
+    """Chunk size for every `sim.run_batch` sweep in the benchmarks.
+
+    `REPRO_BENCH_BATCH` wins when set; otherwise a small timed probe runs
+    one tiny (8 mixes x 4 rates, 6-instance) LUT sweep per candidate chunk
+    size and keeps the fastest. The probe inherits the real sharding setup
+    (`REPRO_BENCH_DEVICES`), so it tunes what the sweeps actually run.
+    Results never depend on the value — only wall time and peak memory do.
+    """
+    if os.environ.get("REPRO_BENCH_BATCH", "").strip():
+        return _env_int("REPRO_BENCH_BATCH", 16)
+    import jax
+    backend = jax.default_backend()
+    cands = _BATCH_CANDIDATES.get(backend, _BATCH_DEFAULT_CANDIDATES)
+    tiny = workloads.default_suite(n_instances=6)
+    stacked = tiny.build_many([(mi, ri) for mi in range(8)
+                               for ri in (0, 5, 9, 13)])
+    t00 = time.time()
+    best = None
+    for b in cands:
+        sim.run_batch(sim.MODE_LUT, stacked, params(), batch_size=b)  # warm
+        t0 = time.perf_counter()
+        np.asarray(sim.run_batch(sim.MODE_LUT, stacked, params(),
+                                 batch_size=b).avg_exec_us)
+        dt = time.perf_counter() - t0
+        if best is None or dt < best[1]:
+            best = (b, dt)
+    print(f"# autotuned REPRO_BENCH_BATCH={best[0]} on {backend} "
+          f"({len(cands)} candidates in {time.time()-t00:.0f}s)")
+    return best[0]
 
 
 @functools.lru_cache()
@@ -66,7 +116,7 @@ def dataset(metric: str = "avg_exec_us") -> oracle.OracleDataset:
     t0 = time.time()
     ds = oracle.generate(suite(), params(), mix_indices=TRAIN_MIXES,
                          rate_indices=TRAIN_RATES, metric=metric,
-                         batch_size=BATCH)
+                         batch_size=batch_size())
     print(f"# oracle dataset[{metric}]: {len(ds)} samples "
           f"(S-frac {ds.labels.mean():.3f}) in {time.time()-t0:.0f}s")
     return ds
@@ -104,13 +154,15 @@ def eval_grid(cells: Sequence[Tuple[int, int]], mode: int,
     """One batched sweep of `mode` over `[(mix_idx, rate_idx), ...]`.
 
     Returns per-cell `SimResult`s (same order as `cells`), computed by a
-    single `run_batch` call chunked by `REPRO_BENCH_BATCH`.
+    single `run_batch` call chunked by `batch_size()` and sharded over
+    `REPRO_BENCH_DEVICES`.
     """
     stacked = workloads.stack_workloads(
         [_cell_workload(mi, ri) for mi, ri in cells]
     )
     res = sim.run_batch(mode, stacked, params(), tree=tree,
-                        rate_threshold=rate_threshold, batch_size=BATCH)
+                        rate_threshold=rate_threshold,
+                        batch_size=batch_size())
     out = [sim.result_at(res, k) for k in range(len(cells))]
     report_health(out, label=f"mode {mode}", cells=cells)
     return out

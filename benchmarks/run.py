@@ -1,15 +1,22 @@
 """Benchmark harness entry point: one section per paper table/figure plus
 the beyond-paper serving and roofline benchmarks. Prints
-``name,us_per_call,derived`` CSV lines with --csv.
+``name,us_per_call,derived`` CSV lines with --csv; --json PATH additionally
+writes a machine-readable `BENCH_sweep.json`-style record (per-section wall
+time, each section's returned metrics, and the derived DAS speedup / EDP
+reductions vs LUT and ETF) so the perf trajectory is comparable across PRs.
 
-    PYTHONPATH=src python -m benchmarks.run [--csv] [--only fig2,fig3,...]
+    PYTHONPATH=src python -m benchmarks.run [--csv] [--json PATH]
+                                            [--only fig2,fig3,...]
 
 Environment: REPRO_BENCH_INSTANCES (default 60) scales workload size;
-REPRO_BENCH_FULL=1 runs all 40 mixes x 14 rates for training/eval.
+REPRO_BENCH_FULL=0 opts out of the full 40 mixes x 14 rates grid;
+REPRO_BENCH_BATCH / REPRO_BENCH_DEVICES control sweep chunking and
+scenario-axis sharding (see benchmarks.common).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 import traceback
 
@@ -29,29 +36,89 @@ SECTIONS = [
 ]
 
 
+def _jsonable(obj):
+    """Best-effort JSON coercion for numpy scalars/arrays in section
+    results; anything else degrades to its repr rather than crashing the
+    record write at the end of a long run."""
+    import numpy as np
+    if isinstance(obj, (np.floating, np.integer, np.bool_)):
+        return obj.item()
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    return repr(obj)
+
+
+def _derived(results: dict) -> dict:
+    """Headline DAS-vs-baseline metrics (paper IV-C), lifted from the
+    summary40 section when it ran: speedup and EDP reduction vs ETF at low
+    rates and vs LUT at high rates."""
+    s40 = results.get("summary40", {}).get("result")
+    if not isinstance(s40, dict):
+        return {}
+    keys = ("speedup_vs_etf_low", "edp_red_vs_etf_low",
+            "speedup_vs_lut_high", "edp_red_vs_lut_high",
+            "das_matches_best_frac")
+    return {k: s40[k] for k in keys if k in s40}
+
+
+def _env_record() -> dict:
+    import os
+
+    import jax
+
+    from benchmarks import common
+    return {
+        "backend": jax.default_backend(),
+        "n_devices": jax.device_count(),
+        "bench_devices": os.environ.get("REPRO_BENCH_DEVICES"),
+        "batch_size": common.batch_size(),
+        "full_grid": common.FULL,
+        "n_instances": common.N_INSTANCES,
+        "train_grid": [len(common.TRAIN_MIXES), len(common.TRAIN_RATES)],
+    }
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--csv", action="store_true",
                     help="emit name,us_per_call,derived CSV lines")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write per-section wall times + metrics to PATH")
     ap.add_argument("--only", default=None)
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
     t00 = time.time()
     failures = []
+    results = {}
     for name, title, fn in SECTIONS:
         if only and name not in only:
             continue
         print(f"\n{'='*72}\n== {name}: {title}\n{'='*72}")
         t0 = time.time()
         try:
-            fn(csv=args.csv)
+            out = fn(csv=args.csv)
+            results[name] = {"wall_s": round(time.time() - t0, 3),
+                             "result": out}
         except Exception as e:
             failures.append((name, e))
+            results[name] = {"wall_s": round(time.time() - t0, 3),
+                             "error": f"{type(e).__name__}: {e}"}
             traceback.print_exc()
         print(f"-- {name} done in {time.time()-t0:.0f}s")
-    print(f"\nall benchmarks done in {time.time()-t00:.0f}s; "
+    total = time.time() - t00
+    print(f"\nall benchmarks done in {total:.0f}s; "
           f"{len(failures)} failures")
+    if args.json:
+        record = {
+            "total_s": round(total, 3),
+            "env": _env_record(),
+            "derived": _derived(results),
+            "sections": results,
+        }
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=2, default=_jsonable)
+        print(f"wrote {args.json}")
     if failures:
         raise SystemExit(1)
 

@@ -3,7 +3,6 @@ ETF at low data rates and vs LUT at high workload complexity; plus the
 fraction of (workload, rate) cells where DAS >= min(LUT, ETF)."""
 from __future__ import annotations
 
-import os
 import time
 
 import numpy as np
@@ -13,7 +12,7 @@ from repro.core import workloads
 
 LOW_RATES = [0, 1, 2]
 HIGH_RATES = [11, 12, 13]
-N_MIXES = 40 if os.environ.get("REPRO_BENCH_FULL", "0") == "1" else 14
+N_MIXES = 40 if common.FULL else 14
 
 
 def run(csv=False):

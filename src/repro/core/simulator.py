@@ -33,6 +33,10 @@ so the scenario axis vmaps: `stack_workloads` (workloads.py) stacks a suite's
 `simulate` over it (`SimParams` held constant; `tree` / `rate_threshold`
 optionally per-scenario for DAS / threshold sweeps). Every `SimResult` field
 gains a leading scenario axis; `result_at` slices one scenario back out.
+`run_batch` additionally chunks the axis into fixed-shape, padded chunks
+(one compiled executable per sweep), shards each chunk across devices
+(`devices=` / `REPRO_BENCH_DEVICES`, see DESIGN.md "Sharded sweeps") and
+streams all chunks through the device queue before one blocking fetch.
 
 Fault injection and graceful degradation
 ----------------------------------------
@@ -69,11 +73,18 @@ bit-identical. Batched sweeps accept a plan with a leading scenario axis
 from __future__ import annotations
 
 import functools
+import os
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, PartitionSpec
+
+try:  # jax >= 0.4.x; pmap fallback below when absent
+    from jax.experimental.shard_map import shard_map as _shard_map
+except ImportError:  # pragma: no cover
+    _shard_map = None
 
 from repro.core import faults as flt
 from repro.core import soc
@@ -1267,9 +1278,16 @@ def _simulate_impl(mode: int, params: SimParams, wl: FlatWorkload,
 simulate = jax.jit(_simulate_impl, static_argnums=(0,))
 
 
-@functools.partial(jax.jit, static_argnums=(0, 6, 7, 8))
-def _simulate_batch(mode, params, wls, tree, rate_threshold, plan,
-                    tree_axis, thr_axis, plan_axis):
+# Trace counter for the batched engine, keyed for introspection: tests
+# assert that a padded ragged sweep reuses ONE compiled executable instead
+# of retracing for the short final chunk (the Python body below only runs
+# when jit actually traces).
+TRACE_COUNT = {"simulate_batch": 0}
+
+
+def _simulate_batch_impl(mode, params, wls, tree, rate_threshold, plan,
+                         tree_axis, thr_axis, plan_axis):
+    TRACE_COUNT["simulate_batch"] += 1
     # One while loop over explicitly-batched state, vmapping only the
     # per-iteration step. Deliberately NOT `vmap(_simulate_impl)`: batching
     # a `while_loop` makes its cond per-lane, and the batching rule then
@@ -1321,6 +1339,9 @@ def _simulate_batch(mode, params, wls, tree, rate_threshold, plan,
     return jax.vmap(_finalize)(wls, s, iters)
 
 
+_simulate_batch = jax.jit(_simulate_batch_impl, static_argnums=(0, 6, 7, 8))
+
+
 def simulate_batch(mode: int, params: SimParams, wls: FlatWorkload,
                    tree: DTree, rate_threshold: jax.Array,
                    plan=None) -> SimResult:
@@ -1364,6 +1385,92 @@ def _prep_plan(plan, params: SimParams, batched: bool):
     return flt.FaultPlan(*[jnp.asarray(x) for x in plan])
 
 
+def _resolve_devices(devices) -> tuple:
+    """Resolve the `devices=` knob (or `REPRO_BENCH_DEVICES`) to a device
+    tuple. `None` -> env var if set, else every local device; an int takes
+    the first k of `jax.devices()`; a sequence of devices passes through."""
+    if devices is None:
+        raw = os.environ.get("REPRO_BENCH_DEVICES")
+        if raw is not None and raw.strip():
+            try:
+                devices = int(raw.strip())
+            except ValueError:
+                raise ValueError(
+                    f"REPRO_BENCH_DEVICES={raw!r} is not an integer"
+                ) from None
+    if devices is None:
+        return tuple(jax.devices())
+    if isinstance(devices, int):
+        avail = jax.devices()
+        if not 1 <= devices <= len(avail):
+            raise ValueError(
+                f"devices={devices} out of range (1..{len(avail)} available)")
+        return tuple(avail[:devices])
+    return tuple(devices)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_batch_fn(mode: int, tree_axis, thr_axis, plan_axis,
+                      has_plan: bool, devices: tuple):
+    """Compiled scenario-sharded batch engine over a fixed device tuple.
+
+    Shards the leading scenario axis of every batched argument across
+    `devices` with `shard_map` (or a `jax.pmap` fallback). Each shard runs
+    its own independent masked while loop — lanes never interact, so there
+    is no collective in the body and no cross-device sync until the caller
+    fetches: per-scenario results are bit-identical regardless of device
+    count. Cached per (mode, batched-axes, devices) so every fixed-shape
+    chunk of a sweep reuses one executable.
+    """
+    D = len(devices)
+
+    def call(params, wls, tree, rate_threshold, plan):
+        return _simulate_batch_impl(mode, params, wls, tree, rate_threshold,
+                                    plan, tree_axis, thr_axis, plan_axis)
+
+    if _shard_map is not None:
+        mesh = Mesh(np.array(devices), ("s",))
+        sh = PartitionSpec("s")
+        rep = PartitionSpec()
+        t_spec = sh if tree_axis == 0 else rep
+        r_spec = sh if thr_axis == 0 else rep
+        if has_plan:
+            fn = _shard_map(call, mesh=mesh,
+                            in_specs=(rep, sh, t_spec, r_spec,
+                                      sh if plan_axis == 0 else rep),
+                            out_specs=sh, check_rep=False)
+            return jax.jit(fn)
+        fn = _shard_map(
+            lambda params, wls, tree, rt: call(params, wls, tree, rt, None),
+            mesh=mesh, in_specs=(rep, sh, t_spec, r_spec), out_specs=sh,
+            check_rep=False)
+        return jax.jit(lambda params, wls, tree, rt, plan:
+                       fn(params, wls, tree, rt))
+
+    # pmap fallback: fold the device axis out of / back into the scenario
+    # axis ([B] -> [D, B/D] -> engine -> [B]); in_axes mirror the specs
+    pm = jax.pmap(call, devices=devices,
+                  in_axes=(None, 0, tree_axis, thr_axis,
+                           plan_axis if has_plan else None))
+
+    def fold(x):
+        return x.reshape((D, x.shape[0] // D) + x.shape[1:])
+
+    def wrapped(params, wls, tree, rate_threshold, plan):
+        wls = jax.tree_util.tree_map(fold, wls)
+        if tree_axis == 0:
+            tree = jax.tree_util.tree_map(fold, tree)
+        if thr_axis == 0:
+            rate_threshold = fold(rate_threshold)
+        if has_plan and plan_axis == 0:
+            plan = jax.tree_util.tree_map(fold, plan)
+        out = pm(params, wls, tree, rate_threshold, plan)
+        return jax.tree_util.tree_map(
+            lambda x: x.reshape((-1,) + x.shape[2:]), out)
+
+    return wrapped
+
+
 def run(mode: int, wl: FlatWorkload, params: SimParams | None = None,
         tree: DTree | None = None,
         rate_threshold: float = 1e9,
@@ -1381,17 +1488,29 @@ def run_batch(mode: int, wls, params: SimParams | None = None,
               tree: DTree | None = None,
               rate_threshold=1e9,
               batch_size: int | None = None,
-              plan=None) -> SimResult:
-    """Batched convenience wrapper over a scenario axis.
+              plan=None,
+              devices=None) -> SimResult:
+    """Sharded, streaming batched sweep over a scenario axis.
 
     `wls` is either a list of same-shape `FlatWorkload`s or an
     already-stacked workload (leading `[S]` axis on every field).
-    `batch_size` chunks the scenario axis (sequential vmapped chunks) so
-    peak memory stays bounded on large sweeps — benchmarks wire it to the
-    `REPRO_BENCH_BATCH` env knob. `tree` / `rate_threshold` /
-    `plan` (a `faults.FaultPlan`, batched via `faults.stack_plans`) may
-    carry a leading `[S]` axis to vary per scenario; chunking slices them
-    along with the workloads. Results are independent of `batch_size`.
+    `batch_size` chunks the scenario axis so peak memory stays bounded on
+    large sweeps — benchmarks wire it to the `REPRO_BENCH_BATCH` env knob.
+    `tree` / `rate_threshold` / `plan` (a `faults.FaultPlan`, batched via
+    `faults.stack_plans`) may carry a leading `[S]` axis to vary per
+    scenario; chunking slices them along with the workloads.
+
+    Every chunk has the same fixed shape: the ragged final chunk is padded
+    up to `batch_size` by replaying the last real scenario, and the pad
+    lanes are sliced off before return — so a whole sweep (and every sweep
+    of the same chunk size) reuses ONE compiled executable instead of
+    retracing for the remainder chunk. `devices` (or `REPRO_BENCH_DEVICES`,
+    default: all of `jax.devices()`) shards the scenario axis of each chunk
+    across devices with `shard_map` (`jax.pmap` fallback); lanes are
+    independent, so per-scenario results are bit-identical for any
+    `batch_size` and any device count. Chunks are dispatched
+    asynchronously and fetched once at the end, overlapping host-side tree
+    slicing with device compute.
     """
     from repro.core.workloads import stack_workloads
 
@@ -1413,21 +1532,50 @@ def run_batch(mode: int, wls, params: SimParams | None = None,
             f"scenarios but the workload has {n}")
     if not isinstance(rate_threshold, jax.Array):
         rate_threshold = jnp.float32(rate_threshold)
-    if batch_size is None or batch_size >= n:
+
+    devs = _resolve_devices(devices)
+    D = len(devs)
+    # fixed chunk shape: user size clamped to n, rounded up to a device
+    # multiple so every shard is equal-sized
+    B = n if batch_size is None else min(batch_size, n)
+    B = -(-B // D) * D
+    if D == 1 and B >= n:
+        # single device, single chunk: the plain vmapped engine
         return simulate_batch(mode, params, stacked, tree, rate_threshold,
                               plan)
 
     tree_b = tree.feat.ndim == 2
     thr_b = rate_threshold.ndim >= 1
+    if D > 1:
+        dispatch = _sharded_batch_fn(mode, 0 if tree_b else None,
+                                     0 if thr_b else None,
+                                     0 if plan_b else None,
+                                     plan is not None, devs)
+    else:
+        def dispatch(p, w, t, rt, pl):
+            return _simulate_batch(mode, p, w, t, rt, pl,
+                                   0 if tree_b else None,
+                                   0 if thr_b else None,
+                                   0 if plan_b else None)
+
+    n_pad = -(-n // B) * B
+    # pad lanes replay the last real scenario; their results are dropped
+    pad_idx = np.minimum(np.arange(n_pad), n - 1)
     chunks = []
-    for lo in range(0, n, batch_size):
-        hi = min(lo + batch_size, n)
-        part = jax.tree_util.tree_map(lambda x: x[lo:hi], stacked)
-        t = jax.tree_util.tree_map(lambda x: x[lo:hi], tree) if tree_b \
-            else tree
-        rt = rate_threshold[lo:hi] if thr_b else rate_threshold
-        pl = jax.tree_util.tree_map(lambda x: x[lo:hi], plan) if plan_b \
-            else plan
-        chunks.append(simulate_batch(mode, params, part, t, rt, pl))
+    for lo in range(0, n_pad, B):
+        ids = pad_idx[lo:lo + B]
+        if ids[-1] == lo + B - 1:          # fully-real chunk: cheap slice
+            def sl(x, lo=lo):
+                return x[lo:lo + B]
+        else:                              # final chunk: padded gather
+            def sl(x, ids=ids):
+                return x[ids]
+        part = jax.tree_util.tree_map(sl, stacked)
+        t = jax.tree_util.tree_map(sl, tree) if tree_b else tree
+        rt = sl(rate_threshold) if thr_b else rate_threshold
+        pl = jax.tree_util.tree_map(sl, plan) if plan_b else plan
+        chunks.append(dispatch(params, part, t, rt, pl))
+    # one blocking fetch for the whole sweep (dispatches above are async)
+    chunks = jax.device_get(chunks)
     return jax.tree_util.tree_map(
-        lambda *xs: jnp.concatenate(xs, axis=0), *chunks)
+        lambda *xs: np.concatenate(xs, axis=0)[:n], *chunks)

@@ -81,10 +81,34 @@ def test_run_batch_matches_sequential(mode):
 
 def test_run_batch_chunking_is_invariant():
     full = sim.run_batch(sim.MODE_LUT, WLS, PARAMS)
-    chunked = sim.run_batch(sim.MODE_LUT, WLS, PARAMS, batch_size=3)
+    # batch sizes that exercise no-pad, ragged-pad, and per-scenario
+    # chunking; devices=1 pins the sharding knob for determinism
+    for bs in (1, 2, 3):
+        chunked = sim.run_batch(sim.MODE_LUT, WLS, PARAMS, batch_size=bs,
+                                devices=1)
+        for name in SCALARS:
+            np.testing.assert_array_equal(np.asarray(getattr(full, name)),
+                                          np.asarray(getattr(chunked, name)),
+                                          err_msg=f"batch_size={bs} {name}")
+
+
+def test_ragged_final_chunk_does_not_retrace():
+    """n=8 with batch_size=5 pads the final chunk [3] -> [5]: the whole
+    sweep must reuse ONE compiled executable (the pre-padding engine
+    traced a second program for the remainder shape), and the padded
+    results must match the unchunked sweep."""
+    wls = WLS + WLS
+    before = sim.TRACE_COUNT["simulate_batch"]
+    chunked = sim.run_batch(sim.MODE_LUT, wls, PARAMS, batch_size=5,
+                            devices=1)
+    assert sim.TRACE_COUNT["simulate_batch"] - before <= 1
+    full = sim.run_batch(sim.MODE_LUT, wls, PARAMS)
     for name in SCALARS:
         np.testing.assert_array_equal(np.asarray(getattr(full, name)),
-                                      np.asarray(getattr(chunked, name)))
+                                      np.asarray(getattr(chunked, name)),
+                                      err_msg=name)
+    np.testing.assert_array_equal(np.asarray(full.finish),
+                                  np.asarray(chunked.finish))
 
 
 def test_run_batch_per_scenario_threshold():
