@@ -3,9 +3,10 @@ suite and scheduler evaluation helpers. Results are cached in-process so
 `benchmarks.run` trains the classifier once.
 
 All (mix x rate) sweeps — oracle generation and the per-mode evaluation
-grids — go through the sharded batched simulator path (`sim.run_batch`,
-one fixed-shape-chunked, device-sharded sweep per mode instead of one
-`sim.run` per cell).
+grids — go through the crash-safe campaign runner (`campaign.run_campaign`
+wrapping `sim.run_batch`: fixed-shape chunks, device sharding, per-chunk
+retry/backoff, and — when a campaign directory is set — atomic chunk
+checkpoints that a killed run resumes bit-exactly; see `sweep()`).
 
 Environment knobs:
   REPRO_BENCH_INSTANCES  frames per workload (default 60)
@@ -19,22 +20,33 @@ Environment knobs:
                          process by `batch_size()`: a small timed probe
                          over a backend-keyed candidate ladder (the
                          vmapped `lax.switch`/straggler crossover differs
-                         between CPU and accelerators).
+                         between CPU and accelerators). The probe result
+                         persists in an on-disk cache keyed by
+                         (backend, device count, jax version).
   REPRO_BENCH_DEVICES    number of devices `sim.run_batch` shards the
                          scenario axis over (default: all of
                          `jax.devices()`); per-scenario results are
                          independent of the device count
+  REPRO_BENCH_CAMPAIGN_DIR  checkpoint campaigns into this directory
+                         (equivalent to `benchmarks.run --resume DIR`)
+  REPRO_BENCH_WATCHDOG_S per-chunk wall-clock watchdog (default: off)
+  REPRO_BENCH_STEP_BUDGET  per-chunk device-side step budget (default:
+                         off; trips retry with an escalated budget)
+  REPRO_BENCH_CACHE_DIR  autotune-cache location (default
+                         ~/.cache/repro)
 """
 from __future__ import annotations
 
 import functools
+import json
 import os
 import time
 from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import das, oracle, simulator as sim, workloads
+from repro.core import campaign as camp, das, oracle, simulator as sim, \
+    workloads
 
 def _env_int(name: str, default: int) -> int:
     """Positive-integer env knob; garbage or non-positive values are
@@ -49,6 +61,27 @@ def _env_int(name: str, default: int) -> int:
             f"{name}={raw!r} is not an integer (default {default})") from None
     if val <= 0:
         raise ValueError(f"{name}={val} must be a positive integer")
+    return val
+
+
+def _env_opt_int(name: str) -> int | None:
+    """Like `_env_int` but unset/blank means None (knob off)."""
+    raw = os.environ.get(name)
+    if raw is None or raw.strip() == "":
+        return None
+    return _env_int(name, 0)
+
+
+def _env_opt_float(name: str) -> float | None:
+    raw = os.environ.get(name)
+    if raw is None or raw.strip() == "":
+        return None
+    try:
+        val = float(raw.strip())
+    except ValueError:
+        raise ValueError(f"{name}={raw!r} is not a number") from None
+    if val <= 0:
+        raise ValueError(f"{name}={val} must be positive")
     return val
 
 
@@ -68,20 +101,56 @@ _BATCH_CANDIDATES = {"cpu": (8, 16, 32)}
 _BATCH_DEFAULT_CANDIDATES = (16, 32, 64, 128)
 
 
-@functools.lru_cache()
-def batch_size() -> int:
-    """Chunk size for every `sim.run_batch` sweep in the benchmarks.
+def _autotune_cache_path() -> str:
+    root = os.environ.get("REPRO_BENCH_CACHE_DIR", "").strip() \
+        or os.path.join(os.path.expanduser("~"), ".cache", "repro")
+    return os.path.join(root, "autotune.json")
 
-    `REPRO_BENCH_BATCH` wins when set; otherwise a small timed probe runs
-    one tiny (8 mixes x 4 rates, 6-instance) LUT sweep per candidate chunk
-    size and keeps the fastest. The probe inherits the real sharding setup
-    (`REPRO_BENCH_DEVICES`), so it tunes what the sweeps actually run.
-    Results never depend on the value — only wall time and peak memory do.
-    """
-    if os.environ.get("REPRO_BENCH_BATCH", "").strip():
-        return _env_int("REPRO_BENCH_BATCH", 16)
+
+def _autotune_key() -> str:
+    """Cache key: anything that shifts the batch-size crossover. The probe
+    inherits the sharding setup, so device count is part of the key."""
     import jax
-    backend = jax.default_backend()
+    return (f"{jax.default_backend()}|dev{len(sim._resolve_devices(None))}"
+            f"|jax{jax.__version__}")
+
+
+def _autotune_cache_load() -> dict:
+    """Read the autotune cache, deleting it if corrupt (a crash mid-write
+    cannot truncate it — writes are atomic — but tolerate hand edits)."""
+    path = _autotune_cache_path()
+    try:
+        with open(path) as f:
+            cache = json.load(f)
+        if not isinstance(cache, dict):
+            raise ValueError("autotune cache is not a JSON object")
+        return cache
+    except FileNotFoundError:
+        return {}
+    except (OSError, ValueError):
+        print(f"# autotune cache {path} unreadable; deleting and re-probing")
+        try:
+            os.remove(path)
+        except OSError:
+            pass
+        return {}
+
+
+def _autotune_cache_store(key: str, value: int) -> None:
+    path = _autotune_cache_path()
+    try:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        cache = _autotune_cache_load()
+        cache[key] = value
+        camp.atomic_write_json(path, cache)
+    except OSError as e:
+        print(f"# autotune cache write failed ({e}); continuing uncached")
+
+
+def _probe_batch_size(backend: str) -> int:
+    """Timed probe: one tiny (8 mixes x 4 rates, 6-instance) LUT sweep per
+    candidate chunk size; fastest wins. Results never depend on the value
+    — only wall time and peak memory do."""
     cands = _BATCH_CANDIDATES.get(backend, _BATCH_DEFAULT_CANDIDATES)
     tiny = workloads.default_suite(n_instances=6)
     stacked = tiny.build_many([(mi, ri) for mi in range(8)
@@ -102,6 +171,86 @@ def batch_size() -> int:
 
 
 @functools.lru_cache()
+def batch_size() -> int:
+    """Chunk size for every batched sweep in the benchmarks.
+
+    `REPRO_BENCH_BATCH` wins when set; otherwise the on-disk autotune
+    cache is consulted (keyed by backend + device count + jax version),
+    and only on a miss does the timed probe run — saving ~10 s on every
+    repeat benchmark run. Corrupt cache files are deleted and re-probed;
+    stale entries (a different key) simply miss.
+    """
+    if os.environ.get("REPRO_BENCH_BATCH", "").strip():
+        return _env_int("REPRO_BENCH_BATCH", 16)
+    import jax
+    key = _autotune_key()
+    cached = _autotune_cache_load().get(key)
+    if isinstance(cached, int) and cached > 0:
+        print(f"# autotune cache hit: REPRO_BENCH_BATCH={cached} [{key}]")
+        return cached
+    best = _probe_batch_size(jax.default_backend())
+    _autotune_cache_store(key, best)
+    return best
+
+
+# ---------------------------------------------------------------------------
+# campaign routing: every benchmark grid goes through run_campaign
+# ---------------------------------------------------------------------------
+_CAMPAIGN_DIR = os.environ.get("REPRO_BENCH_CAMPAIGN_DIR", "").strip() or None
+_SWEEP_STATS: List[Dict] = []
+
+
+def set_campaign_dir(path: str | None) -> None:
+    """Root directory for chunk checkpoints (`benchmarks.run --resume`).
+    None disables checkpointing; sweeps still get watchdog + retry."""
+    global _CAMPAIGN_DIR
+    _CAMPAIGN_DIR = path
+
+
+def campaign_dir() -> str | None:
+    return _CAMPAIGN_DIR
+
+
+def sweep(mode: int, wls, tree=None, rate_threshold=1e9, plan=None,
+          label: str = "") -> sim.SimResult:
+    """One crash-safe batched sweep: the campaign runner over `run_batch`.
+
+    Chunk checkpoints land under `campaign_dir()` when set (so a killed
+    benchmark run resumes bit-exactly); retry/timeout/shrink counters
+    accumulate in `campaign_stats()` for the `--json` report.
+    """
+    out = camp.run_campaign(
+        mode, wls, params(), tree=tree, rate_threshold=rate_threshold,
+        plan=plan, batch_size=batch_size(),
+        checkpoint_dir=campaign_dir(),
+        watchdog_s=_env_opt_float("REPRO_BENCH_WATCHDOG_S"),
+        step_budget=_env_opt_int("REPRO_BENCH_STEP_BUDGET"))
+    _SWEEP_STATS.append({"label": label or f"mode {mode}", **out.stats})
+    return out.result
+
+
+def campaign_stats() -> Dict:
+    """Aggregate campaign health over every sweep this process ran:
+    retries, timeouts, OOM shrink events, stall trips, chunk reuse and
+    per-chunk wall time (surfaced in `benchmarks.run --json`)."""
+    totals = {k: 0 for k in ("n_scenarios", "n_chunks", "chunks_reused",
+                             "chunks_computed", "retries", "timeouts",
+                             "oom_events", "shrinks", "stall_trips")}
+    walls: List[float] = []
+    for s in _SWEEP_STATS:
+        for k in totals:
+            totals[k] += s[k]
+        walls.extend(s["chunk_wall_s"])
+    return {
+        "n_sweeps": len(_SWEEP_STATS),
+        **totals,
+        "chunk_wall_s_max": max(walls) if walls else 0.0,
+        "chunk_wall_s_mean": (sum(walls) / len(walls)) if walls else 0.0,
+        "sweeps": _SWEEP_STATS,
+    }
+
+
+@functools.lru_cache()
 def suite() -> workloads.WorkloadSuite:
     return workloads.default_suite(n_instances=N_INSTANCES)
 
@@ -116,7 +265,9 @@ def dataset(metric: str = "avg_exec_us") -> oracle.OracleDataset:
     t0 = time.time()
     ds = oracle.generate(suite(), params(), mix_indices=TRAIN_MIXES,
                          rate_indices=TRAIN_RATES, metric=metric,
-                         batch_size=batch_size())
+                         batch_size=batch_size(),
+                         runner=lambda m, stacked, p, bs: sweep(
+                             m, stacked, label=f"oracle[{metric}] mode {m}"))
     print(f"# oracle dataset[{metric}]: {len(ds)} samples "
           f"(S-frac {ds.labels.mean():.3f}) in {time.time()-t0:.0f}s")
     return ds
@@ -151,45 +302,76 @@ def eval_cell(mix_idx: int, rate_idx: int, mode: int,
 
 def eval_grid(cells: Sequence[Tuple[int, int]], mode: int,
               tree=None, rate_threshold: float = 1e9) -> List[sim.SimResult]:
-    """One batched sweep of `mode` over `[(mix_idx, rate_idx), ...]`.
+    """One crash-safe batched sweep of `mode` over
+    `[(mix_idx, rate_idx), ...]`.
 
     Returns per-cell `SimResult`s (same order as `cells`), computed by a
-    single `run_batch` call chunked by `batch_size()` and sharded over
+    single `sweep()` campaign chunked by `batch_size()` and sharded over
     `REPRO_BENCH_DEVICES`.
     """
     stacked = workloads.stack_workloads(
         [_cell_workload(mi, ri) for mi, ri in cells]
     )
-    res = sim.run_batch(mode, stacked, params(), tree=tree,
-                        rate_threshold=rate_threshold,
-                        batch_size=batch_size())
+    res = sweep(mode, stacked, tree=tree, rate_threshold=rate_threshold,
+                label=f"grid mode {mode} ({len(cells)} cells)")
     out = [sim.result_at(res, k) for k in range(len(cells))]
     report_health(out, label=f"mode {mode}", cells=cells)
     return out
 
 
+_STALL_REASONS = {sim.STALL_DEADLOCK: "deadlock",
+                  sim.STALL_BUDGET: "step-budget"}
+
+
 def report_health(results: Sequence[sim.SimResult], label: str = "",
                   cells: Sequence[Tuple[int, int]] | None = None) -> Dict:
-    """Aggregate simulator health counters over a sweep and warn loudly.
+    """Aggregate simulator health counters over a sweep and warn loudly,
+    naming *which* scenarios misbehaved (index + (mix, rate) when known).
 
-    A stalled cell (simulator hit its iteration guard before draining the
-    workload) or a dropped job (fault-injection deadline / retry
-    exhaustion) silently skews averages; every grid sweep prints them."""
-    stalled = [k for k, r in enumerate(results) if bool(np.asarray(r.stalled))]
+    A stalled cell (deadlock or iteration/step budget) or a dropped job
+    (fault-injection deadline / retry exhaustion) silently skews
+    averages; every grid sweep prints them."""
+    def where(k):
+        return (k, cells[k]) if cells is not None else (k,)
+
+    stalled = [
+        (*where(k), _STALL_REASONS.get(
+            int(np.asarray(getattr(r, "stall_reason", 0))), "deadlock"))
+        for k, r in enumerate(results) if bool(np.asarray(r.stalled))
+        or int(np.asarray(getattr(r, "stall_reason", 0))) != sim.STALL_NONE
+    ]
+    dropped = [
+        (*where(k), int(np.asarray(r.n_dropped_jobs)),
+         int(np.asarray(r.n_dropped_tasks)))
+        for k, r in enumerate(results)
+        if int(np.asarray(r.n_dropped_jobs)) > 0
+        or int(np.asarray(r.n_dropped_tasks)) > 0
+    ]
     dropped_jobs = int(sum(int(np.asarray(r.n_dropped_jobs))
                            for r in results))
     dropped_tasks = int(sum(int(np.asarray(r.n_dropped_tasks))
                             for r in results))
     health = {"stalled_cells": len(stalled), "dropped_jobs": dropped_jobs,
-              "dropped_tasks": dropped_tasks}
+              "dropped_tasks": dropped_tasks,
+              "stalled_at": stalled, "dropped_at": dropped}
     if stalled:
-        where = [cells[k] for k in stalled] if cells is not None else stalled
-        print(f"# WARNING [{label}]: {len(stalled)} stalled cell(s) at "
-              f"{where[:8]}{'...' if len(where) > 8 else ''} — averages "
-              "exclude unfinished work")
-    if dropped_jobs:
+        print(f"# WARNING [{label}]: {len(stalled)} stalled cell(s) — "
+              "averages exclude unfinished work:")
+        for entry in stalled[:8]:
+            print(f"#   scenario {entry[0]}"
+                  + (f" (mix, rate)={entry[1]}" if cells is not None else "")
+                  + f" reason={entry[-1]}")
+        if len(stalled) > 8:
+            print(f"#   ... and {len(stalled) - 8} more")
+    if dropped:
         print(f"# health [{label}]: {dropped_jobs} dropped job(s) / "
-              f"{dropped_tasks} task(s) across {len(results)} cell(s)")
+              f"{dropped_tasks} task(s) across {len(results)} cell(s):")
+        for entry in dropped[:8]:
+            print(f"#   scenario {entry[0]}"
+                  + (f" (mix, rate)={entry[1]}" if cells is not None else "")
+                  + f" jobs={entry[-2]} tasks={entry[-1]}")
+        if len(dropped) > 8:
+            print(f"#   ... and {len(dropped) - 8} more")
     return health
 
 

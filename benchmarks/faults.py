@@ -44,8 +44,9 @@ def _plan_for(k: int) -> faults.FaultPlan:
 
 
 def _curve(mode: int, wl_b, plan_b, tree=None) -> List[sim.SimResult]:
-    res = sim.run_batch(mode, wl_b, common.params(), tree=tree,
-                        plan=plan_b, batch_size=common.batch_size())
+    # through the crash-safe campaign runner, like every benchmark grid
+    res = common.sweep(mode, wl_b, tree=tree, plan=plan_b,
+                       label=f"faults mode {mode}")
     n = int(np.asarray(plan_b.pe_fail_at).shape[0])
     return [sim.result_at(res, k) for k in range(n)]
 

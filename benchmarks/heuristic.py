@@ -31,9 +31,9 @@ def _best_threshold() -> float:
     stacked = workloads.stack_workloads(
         [common._cell_workload(mi, ri) for mi, ri in cells] * len(cand))
     thr_axis = np.repeat(cand, len(cells)).astype(np.float32)
-    res = sim.run_batch(sim.MODE_THRESHOLD, stacked, common.params(),
-                        rate_threshold=thr_axis,
-                        batch_size=common.batch_size())
+    # one crash-safe campaign over the whole candidate ladder
+    res = common.sweep(sim.MODE_THRESHOLD, stacked,
+                       rate_threshold=thr_axis, label="heuristic-select")
     per_cand = np.asarray(res.avg_exec_us).reshape(len(cand), len(cells))
     return float(cand[np.argmin(per_cand.mean(axis=1))])
 

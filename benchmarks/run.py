@@ -7,16 +7,25 @@ reductions vs LUT and ETF) so the perf trajectory is comparable across PRs.
 
     PYTHONPATH=src python -m benchmarks.run [--csv] [--json PATH]
                                             [--only fig2,fig3,...]
+                                            [--resume DIR]
+
+--resume DIR checkpoints every sweep's chunks into DIR (atomic
+write-temp + rename); re-running the same command after a crash or
+SIGKILL resumes from the completed chunks and produces byte-identical
+results. The --json record gains a "campaign" block (retries, timeouts,
+OOM shrink events, stall trips, chunk reuse, per-chunk wall time), and
+the record itself is written atomically.
 
 Environment: REPRO_BENCH_INSTANCES (default 60) scales workload size;
 REPRO_BENCH_FULL=0 opts out of the full 40 mixes x 14 rates grid;
 REPRO_BENCH_BATCH / REPRO_BENCH_DEVICES control sweep chunking and
-scenario-axis sharding (see benchmarks.common).
+scenario-axis sharding; REPRO_BENCH_CAMPAIGN_DIR / REPRO_BENCH_WATCHDOG_S
+/ REPRO_BENCH_STEP_BUDGET configure the crash-safe campaign layer (see
+benchmarks.common).
 """
 from __future__ import annotations
 
 import argparse
-import json
 import time
 import traceback
 
@@ -85,8 +94,15 @@ def main(argv=None) -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write per-section wall times + metrics to PATH")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--resume", default=None, metavar="DIR",
+                    help="checkpoint sweep chunks into DIR and resume any "
+                         "completed chunks from a previous (killed) run")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import common
+    if args.resume:
+        common.set_campaign_dir(args.resume)
 
     t00 = time.time()
     failures = []
@@ -114,10 +130,13 @@ def main(argv=None) -> None:
             "total_s": round(total, 3),
             "env": _env_record(),
             "derived": _derived(results),
+            "campaign": common.campaign_stats(),
             "sections": results,
         }
-        with open(args.json, "w") as f:
-            json.dump(record, f, indent=2, default=_jsonable)
+        # atomic write (temp + rename): a crash mid-dump never leaves a
+        # truncated BENCH_sweep.json behind
+        from repro.core import campaign
+        campaign.atomic_write_json(args.json, record, default=_jsonable)
         print(f"wrote {args.json}")
     if failures:
         raise SystemExit(1)

@@ -77,6 +77,7 @@ def generate(
     verbose: bool = False,
     batched: bool = True,
     batch_size: int | None = None,
+    runner=None,
 ) -> OracleDataset:
     """Generate the oracle dataset over (mix x rate) scenarios.
 
@@ -85,6 +86,11 @@ def generate(
     `MODE_ETF` sweep; `batch_size` chunks the scenario axis to bound
     memory (see `sim.run_batch`). `batched=False` is the original
     scenario-at-a-time loop; both paths produce identical datasets.
+
+    `runner` swaps the sweep engine for the batched path: a callable
+    `(mode, stacked, params, batch_size) -> SimResult` — the benchmarks
+    pass the crash-safe campaign runner (`benchmarks.common.sweep`) so
+    oracle generation checkpoints and resumes like every other grid.
     """
     params = params or sim.make_params()
     mix_indices = list(mix_indices if mix_indices is not None
@@ -113,11 +119,12 @@ def generate(
                   f"S-run {info['metric_slow_run']:.2f})")
 
     if batched:
+        if runner is None:
+            def runner(m, s, p, bs):
+                return sim.run_batch(m, s, p, batch_size=bs)
         stacked = suite.build_many(cells, seed=seed)
-        r1 = sim.run_batch(sim.MODE_ORACLE, stacked, params,
-                           batch_size=batch_size)
-        r2 = sim.run_batch(sim.MODE_ETF, stacked, params,
-                           batch_size=batch_size)
+        r1 = runner(sim.MODE_ORACLE, stacked, params, batch_size)
+        r2 = runner(sim.MODE_ETF, stacked, params, batch_size)
         all_n_dec = np.asarray(r1.n_decisions)
         all_feat = np.asarray(r1.log_feat)
         all_agree = np.asarray(r1.log_agree)

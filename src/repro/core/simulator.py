@@ -272,6 +272,16 @@ class SimResult(NamedTuple):
     #   killed tasks that eventually completed
     n_recovered: jax.Array     # [] i32 killed tasks that completed anyway
     job_dropped: jax.Array     # [I] bool per-instance drop flags
+    # stall diagnostics (appended last: fields[:21] are the stable
+    # pre-fault prefix other code indexes by position)
+    stall_reason: jax.Array    # [] i32 STALL_NONE / STALL_DEADLOCK /
+    #   STALL_BUDGET (iteration cap or `step_budget` hit before draining)
+
+
+# `SimResult.stall_reason` values
+STALL_NONE = 0      # drained the workload (or dropped the remainder)
+STALL_DEADLOCK = 1  # no event can ever become due again (`stalled` flag)
+STALL_BUDGET = 2    # hit `max_iters` / `step_budget` with work remaining
 
 
 # ---------------------------------------------------------------------------
@@ -1115,7 +1125,8 @@ def _masked_step(mode: int, params: SimParams, s: SimState,
     return s, ev
 
 
-def _finalize(wl: FlatWorkload, s: SimState, iters: jax.Array) -> SimResult:
+def _finalize(wl: FlatWorkload, s: SimState, iters: jax.Array,
+              max_iters) -> SimResult:
     I = wl.inst_arrival.shape[0]
     # per-instance latency: segment-max of finish over each instance's tasks
     inst_fin = jnp.full(I, _NEG).at[wl.inst_id].max(
@@ -1160,6 +1171,14 @@ def _finalize(wl: FlatWorkload, s: SimState, iters: jax.Array) -> SimResult:
         recovery_us=s.recovery_us,
         n_recovered=s.n_recovered,
         job_dropped=s.job_dropped,
+        # budget exhaustion: the loop stopped at its iteration cap (the
+        # natural pathology backstop or an explicit `step_budget`) with
+        # work remaining. `>=` because the batched engine's super-steps
+        # retire several events per iteration and may overshoot the cap.
+        stall_reason=jnp.where(
+            s.stalled, jnp.int32(STALL_DEADLOCK),
+            jnp.where((iters >= max_iters) & (s.n_done < wl.n_tasks),
+                      jnp.int32(STALL_BUDGET), jnp.int32(STALL_NONE))),
     )
 
 
@@ -1174,13 +1193,19 @@ def _fault_iter_bound(base, T: int, I: int, n_pes: int, plan):
 
 def _simulate_impl(mode: int, params: SimParams, wl: FlatWorkload,
                    tree: DTree, rate_threshold: jax.Array,
-                   plan=None) -> SimResult:
+                   plan=None, step_budget: int | None = None) -> SimResult:
     T = wl.task_type.shape[0]
     I = wl.inst_arrival.shape[0]
     n_pes = params.pe_cluster.shape[0]
     max_iters = 3 * T + I + 64
     if plan is not None:
         max_iters = _fault_iter_bound(max_iters, T, I, n_pes, plan)
+    if step_budget is not None:
+        # device-side budget: a stuck chunk terminates on its own instead
+        # of relying on a host watchdog; lanes that hit it report
+        # STALL_BUDGET so the campaign layer can retry with a bigger cap
+        max_iters = jnp.minimum(jnp.asarray(max_iters, jnp.int32),
+                                jnp.int32(step_budget))
 
     def cond(carry):
         s, it = carry
@@ -1266,7 +1291,7 @@ def _simulate_impl(mode: int, params: SimParams, wl: FlatWorkload,
         else flt.pe_slowdown(plan, params.pe_cluster)
     s0 = _init_state(wl, n_pes, pe_slow)
     s, iters = jax.lax.while_loop(cond, body, (s0, jnp.int32(0)))
-    return _finalize(wl, s, iters)
+    return _finalize(wl, s, iters, max_iters)
 
 
 # `mode` is static (each mode compiles its own loop); everything else is
@@ -1275,7 +1300,8 @@ def _simulate_impl(mode: int, params: SimParams, wl: FlatWorkload,
 # runs only the taken branch, which beats the masked step's always-on phases.
 # `plan=None` vs a `FaultPlan` changes the pytree structure, so each case
 # compiles separately and the no-plan trace is untouched by the fault layer.
-simulate = jax.jit(_simulate_impl, static_argnums=(0,))
+# `step_budget` is static: it reshapes the loop bound, not the data.
+simulate = jax.jit(_simulate_impl, static_argnums=(0, 6))
 
 
 # Trace counter for the batched engine, keyed for introspection: tests
@@ -1286,7 +1312,7 @@ TRACE_COUNT = {"simulate_batch": 0}
 
 
 def _simulate_batch_impl(mode, params, wls, tree, rate_threshold, plan,
-                         tree_axis, thr_axis, plan_axis):
+                         tree_axis, thr_axis, plan_axis, step_budget=None):
     TRACE_COUNT["simulate_batch"] += 1
     # One while loop over explicitly-batched state, vmapping only the
     # per-iteration step. Deliberately NOT `vmap(_simulate_impl)`: batching
@@ -1303,6 +1329,9 @@ def _simulate_batch_impl(mode, params, wls, tree, rate_threshold, plan,
     if plan is not None:
         # [S] when the plan is batched; `it < max_iters` is elementwise
         max_iters = _fault_iter_bound(max_iters, T, I, n_pes, plan)
+    if step_budget is not None:
+        max_iters = jnp.minimum(jnp.asarray(max_iters, jnp.int32),
+                                jnp.int32(step_budget))
 
     step = jax.vmap(
         functools.partial(_masked_step, mode, params),
@@ -1336,15 +1365,21 @@ def _simulate_batch_impl(mode, params, wls, tree, rate_threshold, plan,
         wls, n_pes, pe_slow)
     s, iters = jax.lax.while_loop(cond, body,
                                   (s0, jnp.zeros(S, jnp.int32)))
-    return jax.vmap(_finalize)(wls, s, iters)
+    # max_iters is [S] when a batched plan varied it per lane, scalar
+    # otherwise; either way every lane sees the same cap as the sequential
+    # path, so `stall_reason` stays bit-exact between the two engines
+    mi = jnp.asarray(max_iters, jnp.int32)
+    mi_axis = 0 if mi.ndim == 1 else None
+    return jax.vmap(_finalize, in_axes=(0, 0, 0, mi_axis))(wls, s, iters, mi)
 
 
-_simulate_batch = jax.jit(_simulate_batch_impl, static_argnums=(0, 6, 7, 8))
+_simulate_batch = jax.jit(_simulate_batch_impl,
+                          static_argnums=(0, 6, 7, 8, 9))
 
 
 def simulate_batch(mode: int, params: SimParams, wls: FlatWorkload,
                    tree: DTree, rate_threshold: jax.Array,
-                   plan=None) -> SimResult:
+                   plan=None, step_budget: int | None = None) -> SimResult:
     """`jax.vmap` of `simulate` over a leading scenario axis.
 
     `wls` is a stacked workload (`workloads.stack_workloads`): every field
@@ -1361,7 +1396,7 @@ def simulate_batch(mode: int, params: SimParams, wls: FlatWorkload,
     thr_axis = 0 if getattr(rate_threshold, "ndim", 0) >= 1 else None
     plan_axis = 0 if plan is not None and plan.pe_fail_at.ndim == 2 else None
     return _simulate_batch(mode, params, wls, tree, rate_threshold, plan,
-                           tree_axis, thr_axis, plan_axis)
+                           tree_axis, thr_axis, plan_axis, step_budget)
 
 
 def to_device(wl: FlatWorkload) -> FlatWorkload:
@@ -1411,7 +1446,8 @@ def _resolve_devices(devices) -> tuple:
 
 @functools.lru_cache(maxsize=None)
 def _sharded_batch_fn(mode: int, tree_axis, thr_axis, plan_axis,
-                      has_plan: bool, devices: tuple):
+                      has_plan: bool, devices: tuple,
+                      step_budget: int | None = None):
     """Compiled scenario-sharded batch engine over a fixed device tuple.
 
     Shards the leading scenario axis of every batched argument across
@@ -1426,7 +1462,8 @@ def _sharded_batch_fn(mode: int, tree_axis, thr_axis, plan_axis,
 
     def call(params, wls, tree, rate_threshold, plan):
         return _simulate_batch_impl(mode, params, wls, tree, rate_threshold,
-                                    plan, tree_axis, thr_axis, plan_axis)
+                                    plan, tree_axis, thr_axis, plan_axis,
+                                    step_budget)
 
     if _shard_map is not None:
         mesh = Mesh(np.array(devices), ("s",))
@@ -1474,14 +1511,16 @@ def _sharded_batch_fn(mode: int, tree_axis, thr_axis, plan_axis,
 def run(mode: int, wl: FlatWorkload, params: SimParams | None = None,
         tree: DTree | None = None,
         rate_threshold: float = 1e9,
-        plan=None) -> SimResult:
+        plan=None, step_budget: int | None = None) -> SimResult:
     """Convenience wrapper (host-side numpy workload ok). `plan` threads
-    an optional `faults.FaultPlan` through the simulation."""
+    an optional `faults.FaultPlan` through the simulation; `step_budget`
+    caps the event-loop iterations (stall diagnostics in
+    `SimResult.stall_reason`)."""
     params = params or make_params()
     tree = tree or always_fast_tree()
     plan = _prep_plan(plan, params, batched=False)
     return simulate(mode, params, to_device(wl), tree,
-                    jnp.float32(rate_threshold), plan)
+                    jnp.float32(rate_threshold), plan, step_budget)
 
 
 def run_batch(mode: int, wls, params: SimParams | None = None,
@@ -1489,7 +1528,8 @@ def run_batch(mode: int, wls, params: SimParams | None = None,
               rate_threshold=1e9,
               batch_size: int | None = None,
               plan=None,
-              devices=None) -> SimResult:
+              devices=None,
+              step_budget: int | None = None) -> SimResult:
     """Sharded, streaming batched sweep over a scenario axis.
 
     `wls` is either a list of same-shape `FlatWorkload`s or an
@@ -1542,7 +1582,7 @@ def run_batch(mode: int, wls, params: SimParams | None = None,
     if D == 1 and B >= n:
         # single device, single chunk: the plain vmapped engine
         return simulate_batch(mode, params, stacked, tree, rate_threshold,
-                              plan)
+                              plan, step_budget=step_budget)
 
     tree_b = tree.feat.ndim == 2
     thr_b = rate_threshold.ndim >= 1
@@ -1550,13 +1590,13 @@ def run_batch(mode: int, wls, params: SimParams | None = None,
         dispatch = _sharded_batch_fn(mode, 0 if tree_b else None,
                                      0 if thr_b else None,
                                      0 if plan_b else None,
-                                     plan is not None, devs)
+                                     plan is not None, devs, step_budget)
     else:
         def dispatch(p, w, t, rt, pl):
             return _simulate_batch(mode, p, w, t, rt, pl,
                                    0 if tree_b else None,
                                    0 if thr_b else None,
-                                   0 if plan_b else None)
+                                   0 if plan_b else None, step_budget)
 
     n_pad = -(-n // B) * B
     # pad lanes replay the last real scenario; their results are dropped

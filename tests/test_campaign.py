@@ -1,0 +1,439 @@
+"""Crash-safe sweep campaigns (PR-9 tentpole, `repro.core.campaign`).
+
+The acceptance bar:
+
+  * a campaign killed after k of n chunks, resumed against the same
+    checkpoint dir, is **bit-exact** vs one uninterrupted `run_batch`
+    sweep — for all six scheduler modes, and under stacked FaultPlans;
+  * injected chunk failures (forced OOM, watchdog trips, step-budget
+    stalls) are retried with backoff, the final grid is complete, and the
+    retry/shrink counters are visible in the stats that feed
+    `benchmarks.run --json`;
+  * checkpoints are reused (not recomputed) on resume, corrupt chunk
+    files are deleted and recomputed, and the autotune probe cache in
+    `benchmarks.common` survives corruption the same way.
+
+"Kill" here is a non-retryable exception injected into the chunk compute
+after k dispatches — the same observable state as a SIGKILL (k completed
+chunk files + a manifest); the real-SIGKILL variant runs in CI via
+`benchmarks.kill_resume_smoke`.
+"""
+import json
+import os
+import time
+import types
+
+import numpy as np
+import pytest
+
+from repro.core import campaign as camp, faults as flt, simulator as sim, \
+    workloads
+
+PARAMS = sim.make_params()
+SUITE = workloads.default_suite(n_instances=4)
+# 5 scenarios at B=2 -> 3 chunks, the last one padded
+CELLS = [(0, 0), (1, 7), (5, 13), (3, 5), (4, 9)]
+WLS = [SUITE.build(mi, ri) for mi, ri in CELLS]
+B = 2
+N_CHUNKS = 3
+
+ALL_MODES = [sim.MODE_LUT, sim.MODE_ETF, sim.MODE_ETF_IDEAL, sim.MODE_DAS,
+             sim.MODE_ORACLE, sim.MODE_THRESHOLD]
+
+# no sleeping in unit tests
+FAST = camp.RetryPolicy(backoff_base_s=0.0, backoff_max_s=0.0,
+                        jitter_frac=0.0)
+
+
+def _tree():
+    import jax.numpy as jnp
+    return sim.DTree(feat=jnp.array([sim.FEAT_RATE, 1, 1], jnp.int32),
+                     thr=jnp.array([500.0, 4.0, 6.0], jnp.float32),
+                     leaf=jnp.array([0, 1, 0, 1], jnp.int32))
+
+
+def _mode_kw(mode):
+    kw = {}
+    if mode == sim.MODE_DAS:
+        kw["tree"] = _tree()
+    if mode == sim.MODE_THRESHOLD:
+        kw["rate_threshold"] = 500.0
+    return kw
+
+
+def _assert_bit_exact(ref: sim.SimResult, out: sim.SimResult, ctx=""):
+    for name in sim.SimResult._fields:
+        a, b = np.asarray(getattr(ref, name)), np.asarray(getattr(out, name))
+        assert a.dtype == b.dtype and a.shape == b.shape, (ctx, name)
+        assert a.tobytes() == b.tobytes(), (ctx, name, a, b)
+
+
+class _Killed(Exception):
+    """Stand-in for SIGKILL: not OOM, not a timeout -> never retried."""
+
+
+def _kill_after(monkeypatch, k: int):
+    """Patch the chunk compute to die (non-retryably) after k chunks."""
+    real = camp._compute_chunk
+    seen = {"n": 0}
+
+    def bomb(*a, **kw):
+        if seen["n"] >= k:
+            raise _Killed(f"killed after {k} chunks")
+        seen["n"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(camp, "_compute_chunk", bomb)
+    return lambda: monkeypatch.setattr(camp, "_compute_chunk", real)
+
+
+# ---------------------------------------------------------------------------
+# the headline invariant: kill -> resume == one uninterrupted sweep
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", ALL_MODES)
+def test_kill_resume_bit_exact_all_modes(mode, tmp_path, monkeypatch):
+    kw = _mode_kw(mode)
+    ref = sim.run_batch(mode, WLS, PARAMS, batch_size=B, **kw)
+
+    unkill = _kill_after(monkeypatch, 2)
+    with pytest.raises(_Killed):
+        camp.run_campaign(mode, WLS, PARAMS, batch_size=B,
+                          checkpoint_dir=str(tmp_path), retry=FAST, **kw)
+    unkill()
+
+    out = camp.run_campaign(mode, WLS, PARAMS, batch_size=B,
+                            checkpoint_dir=str(tmp_path), retry=FAST, **kw)
+    assert out.stats["chunks_reused"] == 2, out.stats
+    assert out.stats["chunks_computed"] == N_CHUNKS - 2, out.stats
+    _assert_bit_exact(ref, out.result, ctx=f"mode {mode}")
+
+
+def test_kill_resume_bit_exact_stacked_fault_plans(tmp_path, monkeypatch):
+    """The same invariant with a per-scenario FaultPlan riding the
+    scenario axis (chunk slicing must slice the plan too)."""
+    plans = flt.stack_plans([flt.random_plan(s, deadline_us=3000.0)
+                             for s in range(len(WLS))])
+    ref = sim.run_batch(sim.MODE_LUT, WLS, PARAMS, plan=plans, batch_size=B)
+
+    unkill = _kill_after(monkeypatch, 1)
+    with pytest.raises(_Killed):
+        camp.run_campaign(sim.MODE_LUT, WLS, PARAMS, plan=plans,
+                          batch_size=B, checkpoint_dir=str(tmp_path),
+                          retry=FAST)
+    unkill()
+
+    out = camp.run_campaign(sim.MODE_LUT, WLS, PARAMS, plan=plans,
+                            batch_size=B, checkpoint_dir=str(tmp_path),
+                            retry=FAST)
+    assert out.stats["chunks_reused"] == 1, out.stats
+    _assert_bit_exact(ref, out.result, ctx="stacked plans")
+
+
+def test_uncheckpointed_campaign_matches_run_batch():
+    """Without a checkpoint dir the campaign is run_batch + stats."""
+    ref = sim.run_batch(sim.MODE_ETF, WLS, PARAMS, batch_size=B)
+    out = camp.run_campaign(sim.MODE_ETF, WLS, PARAMS, batch_size=B,
+                            retry=FAST)
+    assert out.stats["n_chunks"] == N_CHUNKS
+    assert out.stats["chunks_computed"] == N_CHUNKS
+    _assert_bit_exact(ref, out.result)
+
+
+def test_full_resume_reuses_every_chunk(tmp_path):
+    first = camp.run_campaign(sim.MODE_LUT, WLS, PARAMS, batch_size=B,
+                              checkpoint_dir=str(tmp_path), retry=FAST)
+    again = camp.run_campaign(sim.MODE_LUT, WLS, PARAMS, batch_size=B,
+                              checkpoint_dir=str(tmp_path), retry=FAST)
+    assert again.stats["chunks_reused"] == N_CHUNKS
+    assert again.stats["chunks_computed"] == 0
+    _assert_bit_exact(first.result, again.result)
+    # resume=False recomputes but must not change anything
+    fresh = camp.run_campaign(sim.MODE_LUT, WLS, PARAMS, batch_size=B,
+                              checkpoint_dir=str(tmp_path), retry=FAST,
+                              resume=False)
+    assert fresh.stats["chunks_computed"] == N_CHUNKS
+    _assert_bit_exact(first.result, fresh.result)
+
+
+def test_corrupt_chunk_is_recomputed(tmp_path):
+    first = camp.run_campaign(sim.MODE_LUT, WLS, PARAMS, batch_size=B,
+                              checkpoint_dir=str(tmp_path), retry=FAST)
+    [cdir] = [d for d in tmp_path.iterdir() if d.is_dir()]
+    victim = cdir / "chunk_00001.npz"
+    victim.write_bytes(b"not an npz file")
+    out = camp.run_campaign(sim.MODE_LUT, WLS, PARAMS, batch_size=B,
+                            checkpoint_dir=str(tmp_path), retry=FAST)
+    assert out.stats["chunks_reused"] == N_CHUNKS - 1, out.stats
+    assert out.stats["chunks_computed"] == 1, out.stats
+    _assert_bit_exact(first.result, out.result)
+
+
+def test_different_spec_does_not_share_checkpoints(tmp_path):
+    """Changing anything that affects results (here: the mode) must miss
+    the checkpoint, not silently reuse the wrong chunks."""
+    camp.run_campaign(sim.MODE_LUT, WLS, PARAMS, batch_size=B,
+                      checkpoint_dir=str(tmp_path), retry=FAST)
+    out = camp.run_campaign(sim.MODE_ETF, WLS, PARAMS, batch_size=B,
+                            checkpoint_dir=str(tmp_path), retry=FAST)
+    assert out.stats["chunks_reused"] == 0
+    ref = sim.run_batch(sim.MODE_ETF, WLS, PARAMS, batch_size=B)
+    _assert_bit_exact(ref, out.result)
+
+
+def test_stale_manifest_drops_old_chunks(tmp_path, monkeypatch):
+    camp.run_campaign(sim.MODE_LUT, WLS, PARAMS, batch_size=B,
+                      checkpoint_dir=str(tmp_path), retry=FAST)
+    [cdir] = [d for d in tmp_path.iterdir() if d.is_dir()]
+    mpath = cdir / camp.MANIFEST_NAME
+    stale = json.loads(mpath.read_text())
+    stale["version"] = camp.FORMAT_VERSION - 1
+    mpath.write_text(json.dumps(stale))
+    # same spec, but the manifest no longer matches -> chunks dropped
+    out = camp.run_campaign(sim.MODE_LUT, WLS, PARAMS, batch_size=B,
+                            checkpoint_dir=str(tmp_path), retry=FAST)
+    assert out.stats["chunks_reused"] == 0
+    assert out.stats["chunks_computed"] == N_CHUNKS
+
+
+# ---------------------------------------------------------------------------
+# failure injection: OOM shrink, watchdog, step-budget escalation
+# ---------------------------------------------------------------------------
+def test_forced_oom_shrinks_and_completes(monkeypatch):
+    """RESOURCE_EXHAUSTED above batch 1 -> halving retries down to
+    single-scenario sub-chunks, final grid complete and bit-exact."""
+    ref = sim.run_batch(sim.MODE_LUT, WLS, PARAMS, batch_size=B)
+    real = camp._compute_chunk
+
+    def oomy(mode, part, params, tree, rt, plan, batch, devices, budget):
+        if batch > 1:
+            raise RuntimeError("RESOURCE_EXHAUSTED: out of memory "
+                               "allocating 1.21GB")
+        return real(mode, part, params, tree, rt, plan, batch, devices,
+                    budget)
+
+    monkeypatch.setattr(camp, "_compute_chunk", oomy)
+    out = camp.run_campaign(sim.MODE_LUT, WLS, PARAMS, batch_size=B,
+                            retry=FAST)
+    assert out.stats["oom_events"] == N_CHUNKS, out.stats
+    assert out.stats["shrinks"] == N_CHUNKS, out.stats
+    assert out.stats["retries"] == N_CHUNKS, out.stats
+    _assert_bit_exact(ref, out.result, ctx="post-shrink")
+
+
+def test_oom_exhaustion_raises_campaign_error(monkeypatch):
+    monkeypatch.setattr(
+        camp, "_compute_chunk",
+        lambda *a, **k: (_ for _ in ()).throw(
+            RuntimeError("RESOURCE_EXHAUSTED: out of memory")))
+    with pytest.raises(camp.CampaignError, match="gave up after 2 attempts"):
+        camp.run_campaign(sim.MODE_LUT, WLS, PARAMS, batch_size=B,
+                          retry=camp.RetryPolicy(
+                              max_retries=1, backoff_base_s=0.0,
+                              backoff_max_s=0.0, jitter_frac=0.0))
+
+
+def test_unrecognized_exception_propagates(monkeypatch):
+    """Bugs are not infrastructure weather: no retry, no swallowing."""
+    monkeypatch.setattr(
+        camp, "_compute_chunk",
+        lambda *a, **k: (_ for _ in ()).throw(ValueError("a real bug")))
+    with pytest.raises(ValueError, match="a real bug"):
+        camp.run_campaign(sim.MODE_LUT, WLS, PARAMS, batch_size=B,
+                          retry=FAST)
+
+
+def test_watchdog_trips_then_retry_succeeds(monkeypatch):
+    ref = sim.run_batch(sim.MODE_LUT, WLS, PARAMS, batch_size=B)
+    real = camp._compute_chunk
+    slow = {"left": 1}
+
+    def sleepy(*a, **kw):
+        if slow["left"]:
+            slow["left"] -= 1
+            time.sleep(0.6)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(camp, "_compute_chunk", sleepy)
+    out = camp.run_campaign(sim.MODE_LUT, WLS, PARAMS, batch_size=B,
+                            watchdog_s=0.15, retry=FAST)
+    assert out.stats["timeouts"] >= 1, out.stats
+    assert out.stats["retries"] >= 1, out.stats
+    _assert_bit_exact(ref, out.result, ctx="post-watchdog")
+
+
+def test_step_budget_trip_escalates_and_completes():
+    """A starvation-level step budget trips `STALL_BUDGET`, the retry
+    escalates it x`budget_escalation`, and the campaign still converges
+    to the unbudgeted result."""
+    ref = sim.run_batch(sim.MODE_LUT, WLS, PARAMS, batch_size=B)
+    out = camp.run_campaign(
+        sim.MODE_LUT, WLS, PARAMS, batch_size=B, step_budget=8,
+        retry=camp.RetryPolicy(max_retries=6, backoff_base_s=0.0,
+                               backoff_max_s=0.0, jitter_frac=0.0))
+    assert out.stats["stall_trips"] >= 1, out.stats
+    assert (np.asarray(out.result.stall_reason) == sim.STALL_NONE).all()
+    _assert_bit_exact(ref, out.result, ctx="post-escalation")
+
+
+def test_step_budget_surfaces_stall_reason():
+    """Without the campaign's escalation, a tripped budget is visible as
+    `STALL_BUDGET` in both the sequential and batched engines."""
+    r = sim.run(sim.MODE_LUT, WLS[0], PARAMS, step_budget=8)
+    assert int(r.stall_reason) == sim.STALL_BUDGET
+    assert int(r.n_done) < int(np.asarray(WLS[0].task_type).shape[0])
+    rb = sim.run_batch(sim.MODE_LUT, WLS, PARAMS, batch_size=B,
+                       step_budget=8)
+    assert (np.asarray(rb.stall_reason) == sim.STALL_BUDGET).all()
+    # a generous budget changes nothing
+    r0 = sim.run(sim.MODE_LUT, WLS[0], PARAMS)
+    r1 = sim.run(sim.MODE_LUT, WLS[0], PARAMS, step_budget=10_000_000)
+    assert int(r1.stall_reason) == sim.STALL_NONE
+    _assert_bit_exact(r0, r1, ctx="generous budget")
+
+
+# ---------------------------------------------------------------------------
+# small pieces: geometry, atomic writes, policy math
+# ---------------------------------------------------------------------------
+def test_shrink_batch_respects_device_multiple_and_floor():
+    assert camp._shrink_batch(8, 1, 1) == 4
+    assert camp._shrink_batch(2, 1, 1) == 1
+    assert camp._shrink_batch(1, 1, 1) == 1   # already at the floor
+    assert camp._shrink_batch(8, 4, 1) == 4   # stays a device multiple
+    assert camp._shrink_batch(4, 4, 1) == 4
+    assert camp._shrink_batch(16, 1, 4) == 8
+    assert camp._shrink_batch(8, 1, 4) == 4   # clamped at floor * D
+
+
+def test_backoff_is_seeded_and_capped():
+    pol = camp.RetryPolicy(backoff_base_s=1.0, backoff_factor=2.0,
+                           backoff_max_s=3.0, jitter_frac=0.5, seed=7)
+    a = [pol.backoff_s(k, np.random.RandomState(pol.seed)) for k in range(4)]
+    b = [pol.backoff_s(k, np.random.RandomState(pol.seed)) for k in range(4)]
+    assert a == b                       # reproducible
+    assert all(x <= 3.0 * 1.5 for x in a)   # capped (+jitter)
+    assert a[1] >= a[0]                 # growing until the cap
+
+
+def test_atomic_write_json(tmp_path):
+    path = str(tmp_path / "out.json")
+    camp.atomic_write_json(path, {"a": 1})
+    camp.atomic_write_json(path, {"a": 2, "arr": np.int64(3)},
+                           default=lambda o: int(o))
+    with open(path) as f:
+        assert json.load(f) == {"a": 2, "arr": 3}
+    assert not os.path.exists(path + ".tmp")
+
+
+def test_spec_hash_sensitivity():
+    stacked = workloads.stack_workloads(WLS)
+    stacked = workloads.FlatWorkload(*[np.asarray(f) for f in stacked])
+    tree = type(_tree())(*[np.asarray(f) for f in _tree()])
+    h = lambda mode, thr: camp.spec_hash(  # noqa: E731
+        mode, stacked, PARAMS, tree, np.asarray(thr, np.float32), None)
+    assert h(sim.MODE_LUT, 500.0) == h(sim.MODE_LUT, 500.0)
+    assert h(sim.MODE_LUT, 500.0) != h(sim.MODE_ETF, 500.0)
+    assert h(sim.MODE_LUT, 500.0) != h(sim.MODE_LUT, 600.0)
+
+
+def test_batch_size_validation():
+    with pytest.raises(ValueError, match="positive"):
+        camp.run_campaign(sim.MODE_LUT, WLS, PARAMS, batch_size=0)
+
+
+def test_batched_plan_length_mismatch():
+    plans = flt.stack_plans([flt.random_plan(s) for s in range(2)])
+    with pytest.raises(ValueError, match="2 scenarios"):
+        camp.run_campaign(sim.MODE_LUT, WLS, PARAMS, plan=plans,
+                          batch_size=B)
+
+
+# ---------------------------------------------------------------------------
+# benchmarks.common satellites: autotune cache + health naming
+# ---------------------------------------------------------------------------
+@pytest.fixture()
+def bench_common(tmp_path, monkeypatch):
+    common = pytest.importorskip("benchmarks.common")
+    monkeypatch.setenv("REPRO_BENCH_CACHE_DIR", str(tmp_path))
+    monkeypatch.delenv("REPRO_BENCH_BATCH", raising=False)
+    common.batch_size.cache_clear()
+    yield common
+    common.batch_size.cache_clear()
+
+
+def test_autotune_cache_roundtrip(bench_common, monkeypatch):
+    common = bench_common
+    monkeypatch.setattr(common, "_probe_batch_size", lambda backend: 12)
+    assert common.batch_size() == 12
+    with open(common._autotune_cache_path()) as f:
+        assert f.read().count("12")
+    # second process (simulated): the cache must answer without probing
+    common.batch_size.cache_clear()
+    monkeypatch.setattr(
+        common, "_probe_batch_size",
+        lambda backend: pytest.fail("probe ran despite a warm cache"))
+    assert common.batch_size() == 12
+
+
+def test_autotune_cache_corrupt_file_reprobes(bench_common, monkeypatch):
+    common = bench_common
+    with open(common._autotune_cache_path(), "w") as f:
+        f.write("{ not json")
+    monkeypatch.setattr(common, "_probe_batch_size", lambda backend: 24)
+    assert common.batch_size() == 24
+    with open(common._autotune_cache_path()) as f:
+        cache = json.load(f)          # re-written, valid again
+    assert common._autotune_key() in cache
+
+
+def test_autotune_cache_stale_key_misses(bench_common, monkeypatch):
+    common = bench_common
+    camp.atomic_write_json(common._autotune_cache_path(),
+                           {"tpu|dev8|jax9.9.9": 256})
+    monkeypatch.setattr(common, "_probe_batch_size", lambda backend: 8)
+    assert common.batch_size() == 8   # stale entry ignored, not trusted
+    with open(common._autotune_cache_path()) as f:
+        cache = json.load(f)
+    assert cache["tpu|dev8|jax9.9.9"] == 256   # foreign entries preserved
+
+
+def test_env_batch_overrides_cache(bench_common, monkeypatch):
+    common = bench_common
+    monkeypatch.setenv("REPRO_BENCH_BATCH", "6")
+    monkeypatch.setattr(
+        common, "_probe_batch_size",
+        lambda backend: pytest.fail("probe ran despite REPRO_BENCH_BATCH"))
+    assert common.batch_size() == 6
+
+
+def _fake_result(stalled=False, stall_reason=sim.STALL_NONE, jobs=0,
+                 tasks=0):
+    return types.SimpleNamespace(
+        stalled=np.bool_(stalled), stall_reason=np.int32(stall_reason),
+        n_dropped_jobs=np.int32(jobs), n_dropped_tasks=np.int32(tasks))
+
+
+def test_report_health_names_offending_scenarios(capsys):
+    common = pytest.importorskip("benchmarks.common")
+    results = [_fake_result(),
+               _fake_result(stalled=True,
+                            stall_reason=sim.STALL_DEADLOCK),
+               _fake_result(stall_reason=sim.STALL_BUDGET),
+               _fake_result(jobs=3, tasks=7)]
+    cells = [(0, 0), (1, 7), (5, 13), (3, 5)]
+    health = common.report_health(results, label="unit", cells=cells)
+    assert health["stalled_cells"] == 2
+    assert health["dropped_jobs"] == 3 and health["dropped_tasks"] == 7
+    assert health["stalled_at"] == [(1, (1, 7), "deadlock"),
+                                    (2, (5, 13), "step-budget")]
+    assert health["dropped_at"] == [(3, (3, 5), 3, 7)]
+    out = capsys.readouterr().out
+    assert "scenario 1" in out and "(mix, rate)=(1, 7)" in out
+    assert "step-budget" in out
+    assert "scenario 3" in out and "jobs=3" in out
+
+
+def test_report_health_clean_sweep_is_quiet(capsys):
+    common = pytest.importorskip("benchmarks.common")
+    health = common.report_health([_fake_result()] * 3, label="unit")
+    assert health["stalled_at"] == [] and health["dropped_at"] == []
+    assert capsys.readouterr().out == ""

@@ -286,3 +286,69 @@ def test_validate_config_rejects_malformed():
     bad_power[0] = -1.0
     with pytest.raises(ValueError, match="cluster_power"):
         soc.validate_config(dataclasses.replace(cfg, cluster_power=bad_power))
+
+
+# ---------------------------------------------------------------------------
+# plan-builder edge cases (hypothesis properties; skip without the package)
+# ---------------------------------------------------------------------------
+def test_stack_plans_rejects_zero_length():
+    with pytest.raises(ValueError, match="at least one"):
+        faults.stack_plans([])
+
+
+@hypothesis.settings(max_examples=8, deadline=None)
+@hypothesis.given(st.integers(min_value=0, max_value=10_000),
+                  st.integers(min_value=1, max_value=4))
+def test_stack_plans_slices_back_bit_exact(seed, n):
+    """Stacking then indexing scenario k recovers plan k exactly, and the
+    stacked plan still validates (leading axes are allowed)."""
+    plans = [faults.random_plan(seed + k) for k in range(n)]
+    stacked = faults.stack_plans(plans)
+    assert faults.is_batched(stacked)
+    faults.validate_plan(stacked)
+    for k, p in enumerate(plans):
+        for name, field in zip(faults.FaultPlan._fields, stacked):
+            np.testing.assert_array_equal(
+                np.asarray(field)[k], np.asarray(getattr(p, name)),
+                err_msg=f"{name}[{k}]")
+
+
+@hypothesis.settings(max_examples=6, deadline=None)
+@hypothesis.given(st.floats(min_value=0.0, max_value=50.0,
+                            allow_nan=False))
+def test_all_pes_dead_finite_deadline_never_stalls(at):
+    """Every PE permanently dead at `at` with a finite job deadline: the
+    simulator must terminate by dropping, never by deadlocking."""
+    plan = faults.with_deadline(
+        faults.fail_pes(faults.healthy_plan(), range(soc.N_PES), at=at),
+        2000.0)
+    r = sim.run(sim.MODE_ETF, WL, PARAMS, plan=plan)
+    assert not bool(r.stalled)
+    assert int(r.stall_reason) == sim.STALL_NONE
+    n_jobs = int(np.asarray(WL.inst_id).max()) + 1
+    assert int(np.asarray(r.job_dropped).sum()) == int(r.n_dropped_jobs)
+    if at == 0.0:
+        assert int(r.n_dropped_jobs) == n_jobs  # nothing could ever run
+
+
+def test_all_pes_dead_infinite_deadline_is_a_deadlock_stall():
+    """The same scenario without a deadline cannot make progress and must
+    be *reported* as a deadlock stall, not spin forever."""
+    plan = faults.fail_pes(faults.healthy_plan(), range(soc.N_PES), at=0.0)
+    r = sim.run(sim.MODE_ETF, WL, PARAMS, plan=plan)
+    assert bool(r.stalled)
+    assert int(r.stall_reason) == sim.STALL_DEADLOCK
+    assert int(r.n_done) == 0
+
+
+@hypothesis.settings(max_examples=8, deadline=None)
+@hypothesis.given(st.integers(min_value=0, max_value=10_000))
+def test_retry_budget_zero_never_retries(seed):
+    """max_retries=0: a fault's kill is final — no re-enqueues, and each
+    fault can take down at most the one job it interrupted."""
+    plan = faults.random_plan(seed, n_fail=3, n_transient=4,
+                              t_horizon_us=20.0, max_retries=0)
+    r = sim.run(sim.MODE_ETF, WL, PARAMS, plan=plan)
+    assert not bool(r.stalled)
+    assert int(r.n_retries) == 0
+    assert int(r.n_dropped_jobs) <= int(r.n_faults)
