@@ -32,6 +32,16 @@ Environment knobs:
   REPRO_BENCH_WATCHDOG_S per-chunk wall-clock watchdog (default: off)
   REPRO_BENCH_STEP_BUDGET  per-chunk device-side step budget (default:
                          off; trips retry with an escalated budget)
+  REPRO_BENCH_PACK=0     opt OUT of length-aware chunk packing (scenarios
+                         ordered into chunks by predicted event count so
+                         fixed-shape chunks retire together; results are
+                         unscattered back to grid order, so the knob only
+                         moves wall time and lane occupancy)
+  REPRO_SIM_KERNELS      decision-path kernel dispatch (resolved per call
+                         by `repro.kernels.etf_ft.ops.kernel_mode`):
+                         0/off = inline jnp, 1/auto (default) = Pallas on
+                         TPU / fused XLA elsewhere, pallas = force Pallas
+                         (interpret mode off-TPU), xla = force fused XLA
   REPRO_BENCH_CACHE_DIR  autotune-cache location (default
                          ~/.cache/repro)
 """
@@ -231,11 +241,16 @@ def sweep(mode: int, wls, tree=None, rate_threshold=1e9, plan=None,
 
 def campaign_stats() -> Dict:
     """Aggregate campaign health over every sweep this process ran:
-    retries, timeouts, OOM shrink events, stall trips, chunk reuse and
-    per-chunk wall time (surfaced in `benchmarks.run --json`)."""
+    retries, timeouts, OOM shrink events, stall trips, chunk reuse,
+    per-chunk wall time, and lane occupancy (active while-loop trips over
+    allocated ones — how much of each fixed-shape chunk's compute retired
+    real events rather than spinning masked; length-aware packing exists
+    to push this toward 1). Surfaced in `benchmarks.run --json`."""
     totals = {k: 0 for k in ("n_scenarios", "n_chunks", "chunks_reused",
                              "chunks_computed", "retries", "timeouts",
-                             "oom_events", "shrinks", "stall_trips")}
+                             "oom_events", "shrinks", "stall_trips",
+                             "lane_trips", "active_trips",
+                             "retired_events")}
     walls: List[float] = []
     for s in _SWEEP_STATS:
         for k in totals:
@@ -244,6 +259,8 @@ def campaign_stats() -> Dict:
     return {
         "n_sweeps": len(_SWEEP_STATS),
         **totals,
+        "occupancy": (totals["active_trips"] / totals["lane_trips"]
+                      if totals["lane_trips"] else None),
         "chunk_wall_s_max": max(walls) if walls else 0.0,
         "chunk_wall_s_mean": (sum(walls) / len(walls)) if walls else 0.0,
         "sweeps": _SWEEP_STATS,
@@ -260,14 +277,32 @@ def params() -> sim.SimParams:
     return sim.make_params()
 
 
-@functools.lru_cache()
+# the two oracle sweeps (MODE_ORACLE + MODE_ETF) are metric-independent —
+# only the *labeling* of pending samples reads the metric — so they are
+# cached per mode and shared across dataset(metric) calls instead of
+# re-running the full 40x14 grid for every metric
+_ORACLE_SWEEPS: Dict[int, sim.SimResult] = {}
+
+
 def dataset(metric: str = "avg_exec_us") -> oracle.OracleDataset:
+    # normalized through a single cache key: `dataset()` and
+    # `dataset("avg_exec_us")` are the same dataset (a bare lru_cache
+    # treats them as two entries and regenerates the whole grid)
+    return _dataset(metric)
+
+
+@functools.lru_cache()
+def _dataset(metric: str) -> oracle.OracleDataset:
     t0 = time.time()
+
+    def runner(m, stacked, p, bs):
+        if m not in _ORACLE_SWEEPS:
+            _ORACLE_SWEEPS[m] = sweep(m, stacked, label=f"oracle mode {m}")
+        return _ORACLE_SWEEPS[m]
+
     ds = oracle.generate(suite(), params(), mix_indices=TRAIN_MIXES,
                          rate_indices=TRAIN_RATES, metric=metric,
-                         batch_size=batch_size(),
-                         runner=lambda m, stacked, p, bs: sweep(
-                             m, stacked, label=f"oracle[{metric}] mode {m}"))
+                         batch_size=batch_size(), runner=runner)
     print(f"# oracle dataset[{metric}]: {len(ds)} samples "
           f"(S-frac {ds.labels.mean():.3f}) in {time.time()-t0:.0f}s")
     return ds

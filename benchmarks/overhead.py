@@ -12,7 +12,16 @@ import numpy as np
 
 from benchmarks import common
 from repro.core import simulator as sim, soc
-from repro.kernels.etf_ft import kernel as ek, ref as er
+from repro.kernels.etf_ft import kernel as ek, ops as eo, ref as er
+
+
+def _time_us(f, *args, reps=20):
+    """Warm once (compile), then report mean wall time per call in us."""
+    jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
 
 
 def run(csv=False):
@@ -27,19 +36,34 @@ def run(csv=False):
         "DAS_heavy_nJ": float(res.sched_energy_uj) / n * 1e3,
     }
 
-    # ETF finish-time search wall-time: jnp oracle (jitted, CPU)
+    # ETF finish-time search wall-time, batch of 64 decisions: the jnp
+    # oracle AND the kernel dispatch path (Pallas native on TPU, interpret
+    # elsewhere — interpret is a correctness path, so its time is reported
+    # for scaling context, not as a win)
     B, R, P = 64, 64, 19
     key = jax.random.PRNGKey(0)
     avail = jax.random.uniform(key, (B, R, P)) * 10
     free = jax.random.uniform(key, (B, P)) * 10
     ex = jax.random.uniform(key, (B, R, P)) * 5
     now = jnp.zeros((B,))
-    f = jax.jit(er.etf_ft_reference)
-    f(avail, free, ex, now)[0].block_until_ready()
-    t0 = time.perf_counter()
-    for _ in range(20):
-        f(avail, free, ex, now)[0].block_until_ready()
-    rows["etf_ft_jnp_us_per_batch64"] = (time.perf_counter() - t0) / 20 * 1e6
+    interpret = jax.default_backend() != "tpu"
+    kreps = 3 if interpret else 20
+    rows["etf_ft_jnp_us_per_batch64"] = _time_us(
+        jax.jit(er.etf_ft_reference), avail, free, ex, now)
+    rows["etf_ft_kernel_us_per_batch64"] = _time_us(
+        lambda *a: ek.etf_ft_search(*a, interpret=interpret),
+        avail, free, ex, now, reps=kreps)
+
+    # scenario-batched masked variant (the decision hot path the
+    # simulator routes through under REPRO_SIM_KERNELS)
+    slot_ok = jnp.ones((B, R), bool)
+    alive = jnp.ones((B, P), bool)
+    rows["etf_ft_masked_xla_us_per_batch64"] = _time_us(
+        jax.jit(er.etf_ft_masked_reference),
+        avail, free, ex, now, slot_ok, alive)
+    rows["etf_ft_masked_kernel_us_per_batch64"] = _time_us(
+        lambda *a: ek.etf_ft_search_masked(*a, interpret=interpret),
+        avail, free, ex, now, slot_ok, alive, reps=kreps)
 
     for k, v in rows.items():
         if csv:

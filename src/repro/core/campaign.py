@@ -27,12 +27,25 @@ runtime studies):
     OOM additionally halves the chunk's batch size (down to one scenario
     per device) before giving up; stall-budget trips escalate the step
     budget. Unrecognized exceptions propagate immediately — they are
-    bugs, not infrastructure weather.
+    bugs, not infrastructure weather;
+  * **length-aware packing** — the batched engine's while loop has a
+    scalar cond (`any(running)`), so a chunk runs until its *longest*
+    scenario retires and every other lane spins masked. Scenarios are
+    therefore ordered by a cheap predicted event count
+    (`3 * n_tasks + n_insts`, the engine's own `max_iters` shape) so
+    chunk-mates retire together, descending so the padded tail chunk
+    replays the *cheapest* scenario. The permutation is recorded in the
+    manifest, validated on resume, and results are unscattered back to
+    grid order before return — bit-identical to an unpacked sweep.
+    `pack=False` or `REPRO_BENCH_PACK=0` opts out; per-sweep occupancy
+    (lane-iterations retired vs. allocated) lands in the stats.
 
 Checkpoint format (`<dir>/<spec_hash[:16]>-b<B>/`):
 
   * `manifest.json` — `{version, spec_hash, mode, n_scenarios,
-    chunk_size, n_chunks, fields, jax, numpy}`; written atomically once.
+    chunk_size, n_chunks, fields, perm, jax, numpy}`; written atomically
+    once. Chunks are stored in packed order; `perm` maps packed position
+    -> grid index.
   * `chunk_00000.npz` .. — one file per completed chunk; every
     `SimResult` field under `r_<name>` with leading dim `chunk_size`,
     plus a `meta` JSON blob (wall time, attempts, retries, shrinks).
@@ -55,7 +68,7 @@ from repro.core import faults as flt, simulator as sim
 from repro.core.workloads import FlatWorkload, stack_workloads
 
 MANIFEST_NAME = "manifest.json"
-FORMAT_VERSION = 1
+FORMAT_VERSION = 2    # v2: length-aware packing (chunks in packed order)
 
 
 class CampaignError(RuntimeError):
@@ -115,9 +128,20 @@ class CampaignStats:
     stall_trips: int = 0        # step-budget exhaustions
     chunk_wall_s: list = dataclasses.field(default_factory=list)
     wall_s: float = 0.0
+    packed: bool = False        # length-aware chunk packing in effect
+    # lane-occupancy telemetry, summed over computed (not reused) chunks:
+    # `lane_trips` = lane-iterations allocated (S x while-loop trips per
+    # shard), `active_trips` = those on which the lane was still live,
+    # `retired_events` = simulator events actually retired
+    lane_trips: int = 0
+    active_trips: int = 0
+    retired_events: int = 0
 
     def as_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        d["occupancy"] = (self.active_trips / self.lane_trips
+                          if self.lane_trips else None)
+        return d
 
 
 class CampaignResult(NamedTuple):
@@ -225,7 +249,7 @@ def _open_campaign_dir(root: str, manifest: dict) -> str:
         except (OSError, ValueError):
             old = None
         keys = ("version", "spec_hash", "mode", "n_scenarios",
-                "chunk_size", "n_chunks", "fields")
+                "chunk_size", "n_chunks", "fields", "perm")
         if old is not None and all(old.get(k) == manifest[k] for k in keys):
             return cdir
         # unreadable or stale manifest (e.g. a checkpoint format bump):
@@ -272,13 +296,32 @@ def _call_with_watchdog(fn: Callable, timeout_s: float | None):
 # Module-level so tests can monkeypatch it to inject OOMs / hangs / crashes.
 def _compute_chunk(mode: int, part: FlatWorkload, params, tree,
                    rate_threshold, plan, batch: int, devices: tuple,
-                   step_budget: int | None) -> sim.SimResult:
+                   step_budget: int | None,
+                   telemetry: list | None = None) -> sim.SimResult:
     """One fixed-shape `run_batch` dispatch, fetched to host numpy."""
     res = sim.run_batch(mode, part, params, tree=tree,
                         rate_threshold=rate_threshold, plan=plan,
                         batch_size=batch, devices=list(devices),
-                        step_budget=step_budget)
+                        step_budget=step_budget, telemetry=telemetry)
     return sim.SimResult(*[np.asarray(f) for f in res])
+
+
+def _resolve_pack(pack: bool | None) -> bool:
+    """`pack=` knob, falling back to `REPRO_BENCH_PACK` (default on)."""
+    if pack is not None:
+        return bool(pack)
+    raw = os.environ.get("REPRO_BENCH_PACK", "1").strip().lower()
+    return raw not in ("0", "off", "no", "false")
+
+
+def predicted_events(stacked: FlatWorkload) -> np.ndarray:
+    """[S] cheap per-scenario event-count predictor: `3 * n_tasks +
+    n_insts`, the exact shape of the engine's `max_iters` bound (each
+    task is pushed, decided, and completed once; each instance arrives
+    once). Fault retries add a data-dependent tail the predictor ignores
+    — ordering only needs to be correlated with the true length."""
+    return (3 * np.asarray(stacked.n_tasks, np.int64)
+            + np.asarray(stacked.n_insts, np.int64))
 
 
 # ---------------------------------------------------------------------------
@@ -300,19 +343,25 @@ def run_campaign(mode: int, wls, params=None, tree=None,
                  watchdog_s: float | None = None,
                  step_budget: int | None = None,
                  retry: RetryPolicy | None = None,
-                 chunk_delay_s: float = 0.0) -> CampaignResult:
+                 chunk_delay_s: float = 0.0,
+                 pack: bool | None = None) -> CampaignResult:
     """Crash-safe equivalent of `sim.run_batch` (same sweep arguments).
 
     Campaign knobs: `checkpoint_dir` roots the chunk checkpoints (None
     disables checkpointing; `resume=False` recomputes existing chunks),
     `watchdog_s` / `step_budget` bound each chunk in wall clock / device
-    steps, `retry` configures backoff (see `RetryPolicy`), and
+    steps, `retry` configures backoff (see `RetryPolicy`),
     `chunk_delay_s` sleeps between chunks (throttle; the kill-and-resume
-    smoke test uses it to widen the SIGKILL window).
+    smoke test uses it to widen the SIGKILL window), and `pack` orders
+    scenarios into chunks by predicted event count so fixed-shape chunks
+    retire together (default: `REPRO_BENCH_PACK`, on) — results are
+    unscattered back to input order before return, so packing never
+    changes what a caller sees.
 
     Returns `(result, stats)`: `result` is bit-identical to one
     uninterrupted `run_batch` call over the same scenarios — whether the
-    chunks were computed now, loaded from checkpoints, or both.
+    chunks were computed now, loaded from checkpoints, or both, packed
+    or not.
     """
     params = params or sim.make_params()
     tree = tree if tree is not None else sim.always_fast_tree()
@@ -337,7 +386,20 @@ def run_campaign(mode: int, wls, params=None, tree=None,
     B = -(-B // D) * D
     n_pad = -(-n // B) * B
     n_chunks = n_pad // B
-    pad_idx = np.minimum(np.arange(n_pad), n - 1)
+    # length-aware packing: schedule scenarios in descending predicted
+    # length so each fixed-shape chunk's lanes retire together and the
+    # padded tail chunk (which replays its last scenario) is the cheapest.
+    # Packing only reorders *which* scenarios share a chunk; per-scenario
+    # results are bit-exact, and the stable sort keeps the layout (and
+    # hence checkpoint addressing) deterministic for resume.
+    do_pack = _resolve_pack(pack) and n_chunks > 1
+    if do_pack:
+        perm = np.argsort(-predicted_events(stacked), kind="stable")
+    else:
+        perm = np.arange(n)
+    # schedule order incl. the replayed-pad tail (grid indices per lane)
+    sched = np.concatenate([perm, np.full(n_pad - n, perm[-1] if n else 0,
+                                          dtype=perm.dtype)])
 
     tree_np = type(tree)(*[np.asarray(f) for f in tree])
     tree_b = tree_np.feat.ndim == 2
@@ -355,7 +417,8 @@ def run_campaign(mode: int, wls, params=None, tree=None,
         pl = flt.FaultPlan(*[f[ids] for f in plan]) if plan_b else plan
         return part, t, rt, pl
 
-    stats = CampaignStats(n_scenarios=n, n_chunks=n_chunks)
+    stats = CampaignStats(n_scenarios=n, n_chunks=n_chunks,
+                          packed=bool(do_pack))
     cdir = None
     if checkpoint_dir:
         h = spec_hash(mode, stacked, params, tree_np, rate_threshold, plan)
@@ -364,6 +427,7 @@ def run_campaign(mode: int, wls, params=None, tree=None,
             "version": FORMAT_VERSION, "spec_hash": h, "mode": int(mode),
             "n_scenarios": n, "chunk_size": B, "n_chunks": n_chunks,
             "fields": list(sim.SimResult._fields),
+            "perm": [int(i) for i in perm],
             "jax": jax.__version__, "numpy": np.__version__,
         }
         cdir = _open_campaign_dir(checkpoint_dir, manifest)
@@ -381,7 +445,7 @@ def run_campaign(mode: int, wls, params=None, tree=None,
                 stats.chunk_wall_s.append(0.0)
         if res is None:
             t0 = time.perf_counter()
-            ids = pad_idx[ci * B:(ci + 1) * B]
+            ids = sched[ci * B:(ci + 1) * B]
             res, meta = _run_chunk_with_retries(
                 mode, make_args, ids, params, B, devs, watchdog_s,
                 step_budget, retry, rng, stats, label=f"chunk {ci}")
@@ -394,8 +458,12 @@ def run_campaign(mode: int, wls, params=None, tree=None,
         chunk_results.append(res)
         if chunk_delay_s:
             time.sleep(chunk_delay_s)
+    # chunks are in schedule (packed) order: unscatter back to input order
+    # (`packed[i]` is scenario `perm[i]`, so row j comes from `inv[j]`)
+    inv = np.empty(n, np.int64)
+    inv[perm] = np.arange(n)
     out = sim.SimResult(*[
-        np.concatenate(fields, axis=0)[:n]
+        np.concatenate(fields, axis=0)[:n][inv]
         for fields in zip(*chunk_results)
     ])
     stats.wall_s = round(time.perf_counter() - t_start, 4)
@@ -428,9 +496,12 @@ def _run_chunk_with_retries(mode, make_args, chunk_ids, params, B, devs,
                       f"{retry.max_retries} after {failure}; backing off "
                       f"{delay:.2f}s (batch {b}, step budget {budget})")
                 time.sleep(delay)
+        # fresh per attempt so a failed attempt's partial sub-dispatches
+        # never pollute the occupancy counters
+        tel = []
         try:
             res = _attempt_chunk(mode, make_args, chunk_ids, params, B, b,
-                                 devs, budget, watchdog_s)
+                                 devs, budget, watchdog_s, telemetry=tel)
         except ChunkTimeout as e:
             stats.timeouts += 1
             meta["timeouts"] += 1
@@ -456,6 +527,10 @@ def _run_chunk_with_retries(mode, make_args, chunk_ids, params, B, devs,
             budget = budget * retry.budget_escalation
             meta["final_step_budget"] = budget
             continue
+        for rec in tel:
+            stats.lane_trips += rec["lane_trips"]
+            stats.active_trips += rec["active_trips"]
+            stats.retired_events += rec["events"]
         return res, meta
     raise CampaignError(
         f"{label}: gave up after {retry.max_retries + 1} attempts "
@@ -463,7 +538,8 @@ def _run_chunk_with_retries(mode, make_args, chunk_ids, params, B, devs,
 
 
 def _attempt_chunk(mode, make_args, chunk_ids, params, B, b, devs,
-                   budget, watchdog_s) -> sim.SimResult:
+                   budget, watchdog_s,
+                   telemetry: list | None = None) -> sim.SimResult:
     """One attempt at a chunk, possibly as `ceil(B/b)` sub-dispatches
     when OOM shrank the batch below the chunk size. Sub-chunks are padded
     the same way as the campaign pads the global tail (replay the last
@@ -472,7 +548,8 @@ def _attempt_chunk(mode, make_args, chunk_ids, params, B, b, devs,
         part, t, rt, pl = make_args(chunk_ids)
         return _call_with_watchdog(
             lambda: _compute_chunk(mode, part, params, t, rt, pl, B, devs,
-                                   budget), watchdog_s)
+                                   budget, telemetry=telemetry),
+            watchdog_s)
     n_sub = -(-B // b) * b
     sub_idx = np.minimum(np.arange(n_sub), B - 1)
     subs = []
@@ -481,7 +558,8 @@ def _attempt_chunk(mode, make_args, chunk_ids, params, B, b, devs,
         part, t, rt, pl = make_args(ids)
         subs.append(_call_with_watchdog(
             lambda part=part, t=t, rt=rt, pl=pl: _compute_chunk(
-                mode, part, params, t, rt, pl, b, devs, budget),
+                mode, part, params, t, rt, pl, b, devs, budget,
+                telemetry=telemetry),
             watchdog_s))
     return sim.SimResult(*[
         np.concatenate(fields, axis=0)[:B] for fields in zip(*subs)

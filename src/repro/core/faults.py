@@ -169,6 +169,41 @@ def is_batched(plan: FaultPlan) -> bool:
     return np.ndim(plan.pe_fail_at) == 2
 
 
+# capability flags threaded as a *static* jit argument: the simulator
+# skips tracing fault phases the plan can statically never fire
+NO_CAPS = (False, False, False)
+FULL_CAPS = (True, True, True)
+
+
+def plan_capabilities(plan: FaultPlan) -> tuple:
+    """`(can_die, can_kill, has_deadline)` — which fault phases this plan
+    can ever fire, decidable host-side from the concrete arrays.
+
+    * `can_die` — some PE has a finite failure window, so availability
+      masks / feasibility checks matter.
+    * `can_kill` — some kill instant (permanent failure or transient
+      glitch) is finite AND strictly positive. A kill at `tau` revokes
+      only assignments with `assign_t < tau`, and assignments happen at
+      `now >= 0`, so `tau <= 0` can never revoke anything — the common
+      fail-everything-at-t=0 degradation sweeps skip the whole
+      kill/retry/drop machinery per step.
+    * `has_deadline` — `deadline_us` is finite somewhere, so the
+      deadline-drop phase can fire.
+
+    The simulator traces one specialization per distinct tuple; gated-off
+    phases are exact no-ops (their `due` predicate is identically False),
+    so results are bit-identical to the fully-traced path.
+    """
+    fail = np.asarray(plan.pe_fail_at)
+    trans = np.asarray(plan.transient_at)
+    dl = np.asarray(plan.deadline_us)
+    can_die = bool(np.isfinite(fail).any())
+    can_kill = bool((np.isfinite(fail) & (fail > 0)).any()
+                    or (np.isfinite(trans) & (trans > 0)).any())
+    has_deadline = bool(np.isfinite(dl).any())
+    return can_die, can_kill, has_deadline
+
+
 def validate_plan(plan: FaultPlan, n_pes: int = soc.N_PES,
                   n_clusters: int = soc.N_CLUSTERS) -> FaultPlan:
     """Host-side sanity checks; raises ValueError on malformed plans."""

@@ -89,6 +89,7 @@ except ImportError:  # pragma: no cover
 from repro.core import faults as flt
 from repro.core import soc
 from repro.core.workloads import FlatWorkload, FRAME_KBITS
+from repro.kernels.etf_ft import ops as _kops
 
 MODE_LUT = 0
 MODE_ETF = 1
@@ -370,7 +371,8 @@ FEAT_NAMES = (
 # scheduler decision helpers
 # ---------------------------------------------------------------------------
 def _avail_rows(p: SimParams, wl: FlatWorkload, s: SimState,
-                tasks: jax.Array, bases: jax.Array) -> jax.Array:
+                tasks: jax.Array, bases: jax.Array,
+                kmode: str = "off") -> jax.Array:
     """[K, P] availability (incl. NoC transfer from pred clusters).
 
     Evaluated once per task at push time: a task enters the ready queue
@@ -378,7 +380,9 @@ def _avail_rows(p: SimParams, wl: FlatWorkload, s: SimState,
     placements, and hence this whole row are constants from then on. The
     rows are cached in `SimState.ready_avail` — recomputing the [R, MP, P]
     tensor at every decision was the single hottest part of the batched
-    sweep loop.
+    sweep loop. With `kmode != "off"` the [K, MP, P] contribution max
+    routes through the fused push-time kernel (`kernels/etf_ft/ops.py`),
+    bitwise identical to the inline tensor.
     """
     t = jnp.maximum(tasks, 0)                       # [K]
     preds = wl.preds[t]                             # [K, MP]
@@ -387,6 +391,10 @@ def _avail_rows(p: SimParams, wl: FlatWorkload, s: SimState,
     pfin = jnp.where(pv, s.finish[pidx], _NEG)      # [K, MP]
     pkb = jnp.where(pv, wl.out_kb[pidx], 0.0)
     pcl = p.pe_cluster[jnp.maximum(s.pe_of[pidx], 0)]          # [K, MP]
+    if kmode != "off":
+        return _kops.push_rows(pfin, pkb * p.us_per_kb, pcl, pv,
+                               p.pe_cluster, bases,
+                               p.cluster_pe_mask.shape[0], mode=kmode)
     cross = pcl[:, :, None] != p.pe_cluster[None, None, :]     # [K, MP, P]
     contrib = jnp.where(
         pv[:, :, None],
@@ -396,12 +404,20 @@ def _avail_rows(p: SimParams, wl: FlatWorkload, s: SimState,
     return jnp.maximum(contrib.max(axis=1), bases[:, None])    # [K, P]
 
 
-def _etf_choice(p: SimParams, wl: FlatWorkload, s: SimState):
+def _etf_choice(p: SimParams, wl: FlatWorkload, s: SimState,
+                kmode: str = "off"):
     """Earliest-finish-time (task, pe) over the ready buffer (Algorithm 1).
 
-    Pure lookup over the cached `ready_avail` / `ready_exec` rows.
+    Pure lookup over the cached `ready_avail` / `ready_exec` rows. With
+    `kmode != "off"` the masked finish-time search routes through the
+    decision kernel (same first-global-minimum tie-break).
     """
     slot_ok = s.ready_ids >= 0                      # [R]
+    if kmode != "off":
+        slot, pe, _ = _kops.etf_decide(s.ready_avail, s.pe_free,
+                                       s.ready_exec, s.now, slot_ok, None,
+                                       mode=kmode)
+        return slot, pe
     ft = jnp.maximum(jnp.maximum(s.ready_avail, s.pe_free[None, :]),
                      s.now) + s.ready_exec
     ft = jnp.where(slot_ok[:, None], ft, _INF)
@@ -444,10 +460,14 @@ def _lut_choice_degraded(p: SimParams, wl: FlatWorkload, s: SimState):
     return slot, pe, ok
 
 
-def _etf_choice_degraded(p: SimParams, wl: FlatWorkload, s: SimState):
+def _etf_choice_degraded(p: SimParams, wl: FlatWorkload, s: SimState,
+                         kmode: str = "off"):
     """Fault-aware ETF: (slot, pe, feasible) with dead PEs masked out of
     the earliest-finish-time search. All-alive == `_etf_choice` exactly."""
     slot_ok = s.ready_ids >= 0                      # [R]
+    if kmode != "off":
+        return _kops.etf_decide(s.ready_avail, s.pe_free, s.ready_exec,
+                                s.now, slot_ok, s.pe_alive, mode=kmode)
     ft = jnp.maximum(jnp.maximum(s.ready_avail, s.pe_free[None, :]),
                      s.now) + s.ready_exec
     ft = jnp.where(slot_ok[:, None] & s.pe_alive[None, :], ft, _INF)
@@ -459,7 +479,8 @@ def _etf_choice_degraded(p: SimParams, wl: FlatWorkload, s: SimState):
 
 
 def _can_schedule(mode: int, p: SimParams, wl: FlatWorkload, s: SimState,
-                  tree: DTree, rate_threshold: jax.Array) -> jax.Array:
+                  tree: DTree, rate_threshold: jax.Array,
+                  kmode: str = "off") -> jax.Array:
     """Whether the scheduler the mode would invoke has a feasible
     (task, PE) pair under the current availability mask (fault path only).
 
@@ -471,7 +492,7 @@ def _can_schedule(mode: int, p: SimParams, wl: FlatWorkload, s: SimState,
     if mode in (MODE_LUT, MODE_ORACLE):
         return _lut_choice_degraded(p, wl, s)[2]
     if mode in (MODE_ETF, MODE_ETF_IDEAL):
-        return _etf_choice_degraded(p, wl, s)[2]
+        return _etf_choice_degraded(p, wl, s, kmode)[2]
     # DAS / THRESHOLD: feasibility of the scheduler the policy will pick
     feats = _features(p, wl, s)
     if mode == MODE_DAS:
@@ -479,7 +500,7 @@ def _can_schedule(mode: int, p: SimParams, wl: FlatWorkload, s: SimState,
     else:
         use_slow = feats[FEAT_RATE] >= rate_threshold
     ok_f = _lut_choice_degraded(p, wl, s)[2]
-    ok_s = _etf_choice_degraded(p, wl, s)[2]
+    ok_s = _etf_choice_degraded(p, wl, s, kmode)[2]
     return jnp.where(use_slow, ok_s, ok_f)
 
 
@@ -550,7 +571,7 @@ def _next_completion(s: SimState):
 def _push_ready_many(p: SimParams, wl: FlatWorkload, s: SimState,
                      tasks: jax.Array, bases: jax.Array,
                      do_push: jax.Array, rows_avail=None,
-                     plan=None) -> SimState:
+                     plan=None, kmode: str = "off") -> SimState:
     """FIFO-push up to K tasks (k ascending), caching their [P] rows.
 
     Replicates K sequential single-task pushes exactly. Slot assignment:
@@ -563,7 +584,7 @@ def _push_ready_many(p: SimParams, wl: FlatWorkload, s: SimState,
     """
     t = jnp.maximum(tasks, 0)                             # [K]
     if rows_avail is None:
-        rows_avail = _avail_rows(p, wl, s, t, bases)      # [K, P]
+        rows_avail = _avail_rows(p, wl, s, t, bases, kmode)   # [K, P]
     rows_exec = p.exec_pe[wl.task_type[t]]                # [K, P]
     if plan is not None:
         # cluster slowdown stretches the cached exec rows at push time
@@ -658,7 +679,7 @@ def _assign(p: SimParams, wl: FlatWorkload, s: SimState, slot: jax.Array,
 
 def _process_completion(p: SimParams, wl: FlatWorkload,
                         s: SimState, active=None, t=None,
-                        plan=None) -> SimState:
+                        plan=None, kmode: str = "off") -> SimState:
     if t is None:
         # earliest-finishing running task; when a completion is due, every
         # task at the minimum of `fin_run` has finish <= now, so this is
@@ -705,7 +726,7 @@ def _process_completion(p: SimParams, wl: FlatWorkload,
     pv = jnp.arange(pr.shape[1])[None, :] < wl.n_preds[sc][:, None]
     bases = jnp.where(pv, s.finish[jnp.maximum(pr, 0)], _NEG).max(axis=1)
     return _push_ready_many(p, wl, s, sc, jnp.maximum(bases, s.now),
-                            ready_now, plan=plan)
+                            ready_now, plan=plan, kmode=kmode)
 
 
 def _process_arrival(p: SimParams, wl: FlatWorkload, s: SimState,
@@ -825,7 +846,7 @@ def _drop_instance(p: SimParams, wl: FlatWorkload, s: SimState,
 
 
 def _process_kill(plan, p: SimParams, wl: FlatWorkload, s: SimState,
-                  t: jax.Array, active=None) -> SimState:
+                  t: jax.Array, active=None, kmode: str = "off") -> SimState:
     """Revoke the live assignment of running task `t` at the current time
     (`now` sits exactly on the fault instant: advance stops at every plan
     time). Executed work is wasted (`reexec_us`) but its energy/busy time
@@ -875,7 +896,7 @@ def _process_kill(plan, p: SimParams, wl: FlatWorkload, s: SimState,
     # retry: back to the FIFO tail, availability re-based at now (preds
     # are all done, so the cached row is recomputable)
     s = _push_ready_many(p, wl, s, t[None], s.now[None],
-                         jnp.asarray(rk)[None], plan=plan)
+                         jnp.asarray(rk)[None], plan=plan, kmode=kmode)
     # exhausted: the whole job goes
     return _drop_instance(p, wl, s, wl.inst_id[t], active=jnp.asarray(dr))
 
@@ -892,19 +913,31 @@ def _pending_deadline(plan, wl: FlatWorkload, s: SimState):
     return due.any(), inst
 
 
-def _next_wakeup(plan, wl: FlatWorkload, s: SimState) -> jax.Array:
+def _next_wakeup(plan, wl: FlatWorkload, s: SimState,
+                 fcaps=flt.FULL_CAPS) -> jax.Array:
     """Earliest strictly-future fault instant, repair, or pending job
     deadline — extra advance targets so `now` lands exactly on each fault
-    event (a stop with nothing due simply advances again)."""
-    times = jnp.concatenate([plan.pe_fail_at, plan.pe_repair_at,
-                             plan.transient_at.reshape(-1)])
-    t1 = jnp.where(times > s.now, times, _INF).min()
-    I = wl.inst_arrival.shape[0]
-    arrived = jnp.arange(I) < s.arr_ptr
-    pend = arrived & wl.inst_valid & (s.inst_rem > 0)
-    dl = jnp.where(pend, wl.inst_arrival + plan.deadline_us, _INF)
-    t2 = jnp.where(dl > s.now, dl, _INF).min()
-    return jnp.minimum(t1, t2)
+    event (a stop with nothing due simply advances again). Targets a
+    capability rules out are statically dropped: a time that can never be
+    strictly future (or never matters) contributes `inf` to the min, so
+    skipping it is exact."""
+    can_die, can_kill, has_deadline = fcaps
+    parts = []
+    if can_die:
+        parts += [plan.pe_fail_at, plan.pe_repair_at]
+    if can_kill:
+        parts.append(plan.transient_at.reshape(-1))
+    out = _INF
+    if parts:
+        times = jnp.concatenate(parts)
+        out = jnp.where(times > s.now, times, _INF).min()
+    if has_deadline:
+        I = wl.inst_arrival.shape[0]
+        arrived = jnp.arange(I) < s.arr_ptr
+        pend = arrived & wl.inst_valid & (s.inst_rem > 0)
+        dl = jnp.where(pend, wl.inst_arrival + plan.deadline_us, _INF)
+        out = jnp.minimum(out, jnp.where(dl > s.now, dl, _INF).min())
+    return jnp.asarray(out, jnp.float32)
 
 
 # ---------------------------------------------------------------------------
@@ -959,7 +992,7 @@ def _init_state(wl: FlatWorkload, n_pes: int, pe_slow=None) -> SimState:
 
 def _decide(mode: int, p: SimParams, wl: FlatWorkload, s: SimState,
             tree: DTree, rate_threshold: jax.Array,
-            active=None, plan=None) -> SimState:
+            active=None, plan=None, kmode: str = "off") -> SimState:
     feats = _features(p, wl, s)
     n = s.ready_cnt.astype(jnp.float32)
     etf_lat = soc.etf_latency_us(n)
@@ -972,8 +1005,8 @@ def _decide(mode: int, p: SimParams, wl: FlatWorkload, s: SimState,
 
     def etf():
         if plan is None:
-            return _etf_choice(p, wl, s)
-        return _etf_choice_degraded(p, wl, s)[:2]
+            return _etf_choice(p, wl, s, kmode)
+        return _etf_choice_degraded(p, wl, s, kmode)[:2]
 
     if mode == MODE_LUT:
         slot, pe = lut()
@@ -1021,7 +1054,8 @@ def _decide(mode: int, p: SimParams, wl: FlatWorkload, s: SimState,
 
 def _masked_step(mode: int, params: SimParams, s: SimState,
                  wl: FlatWorkload, tree: DTree, rate_threshold: jax.Array,
-                 plan, run: jax.Array):
+                 plan, run: jax.Array, kmode: str = "off",
+                 fcaps=flt.FULL_CAPS):
     """One super-step of gated phases (no `lax.switch`); returns (s, ev).
 
     Phases run in the sequential body's priority order (completion >
@@ -1039,14 +1073,17 @@ def _masked_step(mode: int, params: SimParams, s: SimState,
     carry once per branch, which dominated the sweep cost.
     """
     I = wl.inst_arrival.shape[0]
-    if plan is not None:
+    can_die, can_kill, has_deadline = fcaps if plan is not None \
+        else flt.NO_CAPS
+    if plan is not None and can_die:
         s = s._replace(pe_alive=flt.alive_at(plan, s.now))
     # one two-level search serves completion detection, the completed task
     # index, AND the advance target (the switch path derives all three
     # from status/finish separately — same values, more passes)
     fin_idx, fin_val = _next_completion(s)
     c = run & (fin_val <= s.now)
-    s = _process_completion(params, wl, s, active=c, t=fin_idx, plan=plan)
+    s = _process_completion(params, wl, s, active=c, t=fin_idx, plan=plan,
+                            kmode=kmode)
 
     # a completion tie leaves another completion due: everything below
     # must wait for the next iteration then, exactly as the switch would
@@ -1055,19 +1092,24 @@ def _masked_step(mode: int, params: SimParams, s: SimState,
 
     # fault phases (priority: completion > kill > deadline > arrival).
     # Gates re-derive after each phase, mirroring the sequential 6-way
-    # switch: a second due kill / deadline blocks everything later.
+    # switch: a second due kill / deadline blocks everything later. A
+    # phase the plan's static capabilities rule out (see
+    # `faults.plan_capabilities`) is skipped at trace time — its `due`
+    # predicate would be identically False, so the skip is exact, and
+    # the per-trip cost of the kill/drop machinery (FIFO purges, fin_seg
+    # rebuilds, re-push) vanishes for plans that can never fire it.
     k = dl = jnp.array(False)
-    if plan is not None:
+    no_k = no_dl = jnp.array(True)
+    if plan is not None and can_kill:
         k_due, k_task, _ = _pending_kill(plan, s)
         k = run & no_c & k_due
-        s = _process_kill(plan, params, wl, s, k_task, active=k)
+        s = _process_kill(plan, params, wl, s, k_task, active=k, kmode=kmode)
         no_k = ~_pending_kill(plan, s)[0]
+    if plan is not None and has_deadline:
         dl_due, dl_inst = _pending_deadline(plan, wl, s)
         dl = run & no_c & no_k & dl_due
         s = _drop_instance(params, wl, s, dl_inst, active=dl)
         no_dl = ~_pending_deadline(plan, wl, s)[0]
-    else:
-        no_k = no_dl = jnp.array(True)
 
     def arr_due(st):
         return (st.arr_ptr < wl.n_insts) & (
@@ -1080,15 +1122,15 @@ def _masked_step(mode: int, params: SimParams, s: SimState,
     # same-timestamp arrivals: the next one blocks the decide phase; an
     # arrival can also arm an already-expired deadline (deadline_us ~ 0)
     no_a = ~arr_due(s)
-    if plan is not None:
+    if plan is not None and has_deadline:
         no_dl = ~_pending_deadline(plan, wl, s)[0]
     can_decide = s.ready_cnt > 0
-    if plan is not None:
+    if plan is not None and can_die:
         can_decide &= _can_schedule(mode, params, wl, s, tree,
-                                    rate_threshold)
+                                    rate_threshold, kmode)
     d = run & no_c & no_k & no_dl & no_a & can_decide
     s = _decide(mode, params, wl, s, tree, rate_threshold, active=d,
-                plan=plan)
+                plan=plan, kmode=kmode)
 
     # advance when nothing else can fire *after* this trip's phases: a
     # decide leaves finish > now (exec times are positive), so no
@@ -1096,14 +1138,17 @@ def _masked_step(mode: int, params: SimParams, s: SimState,
     # recompute the min. Queue emptiness is post-decide. After the final
     # completion the sequential cond exits without reaching do_advance,
     # hence the n_done guard.
-    if plan is None:
+    if plan is None or not (can_kill or has_deadline):
+        # only a decide touched fin_seg this trip (no kills/drops traced)
         next_fin = jnp.where(d, s.fin_seg.min(), next_fin)
-        blocked = s.ready_cnt == 0
     else:
         # kills / drops also touched fin_seg — recompute unconditionally
         next_fin = s.fin_seg.min()
+    if plan is not None and can_die:
         blocked = ~((s.ready_cnt > 0) & _can_schedule(
-            mode, params, wl, s, tree, rate_threshold))
+            mode, params, wl, s, tree, rate_threshold, kmode))
+    else:
+        blocked = s.ready_cnt == 0
     adv = (run & no_c & no_k & no_dl & no_a & blocked
            & (s.n_done < wl.n_tasks))
     next_arr = jnp.where(
@@ -1111,8 +1156,8 @@ def _masked_step(mode: int, params: SimParams, s: SimState,
         wl.inst_arrival[jnp.minimum(s.arr_ptr, I - 1)], _INF,
     )
     nxt = jnp.minimum(next_fin, next_arr)
-    if plan is not None:
-        nxt = jnp.minimum(nxt, _next_wakeup(plan, wl, s))
+    if plan is not None and (can_die or can_kill or has_deadline):
+        nxt = jnp.minimum(nxt, _next_wakeup(plan, wl, s, fcaps))
     stuck = ~jnp.isfinite(nxt)
     nxt = jnp.where(stuck, s.now, nxt)
     s = s._replace(
@@ -1193,7 +1238,11 @@ def _fault_iter_bound(base, T: int, I: int, n_pes: int, plan):
 
 def _simulate_impl(mode: int, params: SimParams, wl: FlatWorkload,
                    tree: DTree, rate_threshold: jax.Array,
-                   plan=None, step_budget: int | None = None) -> SimResult:
+                   plan=None, step_budget: int | None = None,
+                   kernels: str = "off",
+                   fcaps: tuple = flt.FULL_CAPS) -> SimResult:
+    can_die, can_kill, has_deadline = fcaps if plan is not None \
+        else flt.NO_CAPS
     T = wl.task_type.shape[0]
     I = wl.inst_arrival.shape[0]
     n_pes = params.pe_cluster.shape[0]
@@ -1213,7 +1262,7 @@ def _simulate_impl(mode: int, params: SimParams, wl: FlatWorkload,
 
     def body(carry):
         s, it = carry
-        if plan is not None:
+        if plan is not None and can_die:
             s = s._replace(pe_alive=flt.alive_at(plan, s.now))
         completion_due = s.fin_seg.min() <= s.now
         arrival_due = (s.arr_ptr < wl.n_insts) & (
@@ -1222,14 +1271,15 @@ def _simulate_impl(mode: int, params: SimParams, wl: FlatWorkload,
         can_decide = s.ready_cnt > 0
 
         def do_completion(st):
-            return _process_completion(params, wl, st, plan=plan)
+            return _process_completion(params, wl, st, plan=plan,
+                                       kmode=kernels)
 
         def do_arrival(st):
             return _process_arrival(params, wl, st, plan=plan)
 
         def do_decide(st):
             return _decide(mode, params, wl, st, tree, rate_threshold,
-                           plan=plan)
+                           plan=plan, kmode=kernels)
 
         def do_advance(st):
             next_fin = st.fin_seg.min()
@@ -1238,8 +1288,8 @@ def _simulate_impl(mode: int, params: SimParams, wl: FlatWorkload,
                 wl.inst_arrival[jnp.minimum(st.arr_ptr, I - 1)], _INF,
             )
             nxt = jnp.minimum(next_fin, next_arr)
-            if plan is not None:
-                nxt = jnp.minimum(nxt, _next_wakeup(plan, wl, st))
+            if plan is not None and (can_die or can_kill or has_deadline):
+                nxt = jnp.minimum(nxt, _next_wakeup(plan, wl, st, fcaps))
             # deadlock guard: nothing running and nothing left to arrive
             # means no event can ever become due again (unschedulable
             # tasks) — flag the stall so `cond` exits instead of spinning
@@ -1261,16 +1311,33 @@ def _simulate_impl(mode: int, params: SimParams, wl: FlatWorkload,
 
         # fault path: six branches, priority completion > kill > deadline
         # > arrival > decide > advance; a decision additionally requires
-        # the chosen scheduler to have a feasible (task, PE) pair
-        k_due, k_task, _ = _pending_kill(plan, s)
-        dl_due, dl_inst = _pending_deadline(plan, wl, s)
-        can_decide &= _can_schedule(mode, params, wl, s, tree,
-                                    rate_threshold)
+        # the chosen scheduler to have a feasible (task, PE) pair.
+        # Phases the plan's static capabilities rule out keep their
+        # branch slot but with an identically-False gate and an identity
+        # body — the per-iteration pending scans (and the heavy branch
+        # bodies) are never traced, and the skip is exact because the
+        # gate could never fire anyway (`faults.plan_capabilities`).
+        if can_kill:
+            k_due, k_task, _ = _pending_kill(plan, s)
+        else:
+            k_due, k_task = jnp.array(False), jnp.int32(0)
+        if has_deadline:
+            dl_due, dl_inst = _pending_deadline(plan, wl, s)
+        else:
+            dl_due, dl_inst = jnp.array(False), jnp.int32(0)
+        if can_die:
+            can_decide &= _can_schedule(mode, params, wl, s, tree,
+                                        rate_threshold, kernels)
 
         def do_kill(st):
-            return _process_kill(plan, params, wl, st, k_task)
+            if not can_kill:
+                return st
+            return _process_kill(plan, params, wl, st, k_task,
+                                 kmode=kernels)
 
         def do_deadline(st):
+            if not has_deadline:
+                return st
             return _drop_instance(params, wl, st, dl_inst)
 
         branch = jnp.where(
@@ -1301,7 +1368,10 @@ def _simulate_impl(mode: int, params: SimParams, wl: FlatWorkload,
 # `plan=None` vs a `FaultPlan` changes the pytree structure, so each case
 # compiles separately and the no-plan trace is untouched by the fault layer.
 # `step_budget` is static: it reshapes the loop bound, not the data.
-simulate = jax.jit(_simulate_impl, static_argnums=(0, 6))
+# `kernels` is the resolved `REPRO_SIM_KERNELS` dispatch mode (static: it
+# picks which decision primitives get traced); callers resolve it from the
+# env at call time so flipping the knob never hits a stale trace.
+simulate = jax.jit(_simulate_impl, static_argnums=(0, 6, 7, 8))
 
 
 # Trace counter for the batched engine, keyed for introspection: tests
@@ -1311,8 +1381,21 @@ simulate = jax.jit(_simulate_impl, static_argnums=(0, 6))
 TRACE_COUNT = {"simulate_batch": 0}
 
 
+class BatchTelemetry(NamedTuple):
+    """Per-lane occupancy counters for one batched-engine call.
+
+    Deliberately NOT part of `SimResult`: these depend on which scenarios
+    share a chunk (the scalar-cond loop spins every lane until the whole
+    chunk retires), so folding them into the result would break the
+    bit-exactness contract between differently-chunked sweeps.
+    """
+    loop_trips: jax.Array    # [S] while-loop trips of the lane's shard
+    active_trips: jax.Array  # [S] trips on which the lane was still live
+
+
 def _simulate_batch_impl(mode, params, wls, tree, rate_threshold, plan,
-                         tree_axis, thr_axis, plan_axis, step_budget=None):
+                         tree_axis, thr_axis, plan_axis, step_budget=None,
+                         kernels: str = "off", fcaps: tuple = flt.FULL_CAPS):
     TRACE_COUNT["simulate_batch"] += 1
     # One while loop over explicitly-batched state, vmapping only the
     # per-iteration step. Deliberately NOT `vmap(_simulate_impl)`: batching
@@ -1334,7 +1417,8 @@ def _simulate_batch_impl(mode, params, wls, tree, rate_threshold, plan,
                                 jnp.int32(step_budget))
 
     step = jax.vmap(
-        functools.partial(_masked_step, mode, params),
+        functools.partial(_masked_step, mode, params, kmode=kernels,
+                          fcaps=fcaps),
         in_axes=(0, 0, tree_axis, thr_axis, plan_axis, 0),
     )
 
@@ -1342,19 +1426,20 @@ def _simulate_batch_impl(mode, params, wls, tree, rate_threshold, plan,
         return (s.n_done < wls.n_tasks) & ~s.stalled & (it < max_iters)
 
     def cond(carry):
-        s, it = carry
+        s, it, act, trips = carry
         return jnp.any(running(s, it))
 
     def body(carry):
-        s, it = carry
+        s, it, act, trips = carry
         run = running(s, it)
         s, ev = step(s, wls, tree, rate_threshold, plan, run)
         # it counts retired *events*, matching the sequential n_iters
         # (a super-step can retire up to 4, or 6 with faults). A lane
         # within a few of max_iters may overshoot the cap by a couple of
         # events; max_iters is a pathology backstop, so the slack is
-        # irrelevant in practice.
-        return (s, it + ev)
+        # irrelevant in practice. `act`/`trips` are occupancy telemetry
+        # only — they feed BatchTelemetry, never the result.
+        return (s, it + ev, act + run.astype(jnp.int32), trips + 1)
 
     if plan is None:
         pe_slow, slow_axis = None, None
@@ -1363,23 +1448,32 @@ def _simulate_batch_impl(mode, params, wls, tree, rate_threshold, plan,
         slow_axis = 0 if pe_slow.ndim == 2 else None
     s0 = jax.vmap(_init_state, in_axes=(0, None, slow_axis))(
         wls, n_pes, pe_slow)
-    s, iters = jax.lax.while_loop(cond, body,
-                                  (s0, jnp.zeros(S, jnp.int32)))
+    s, iters, act, trips = jax.lax.while_loop(
+        cond, body,
+        (s0, jnp.zeros(S, jnp.int32), jnp.zeros(S, jnp.int32),
+         jnp.int32(0)))
     # max_iters is [S] when a batched plan varied it per lane, scalar
     # otherwise; either way every lane sees the same cap as the sequential
     # path, so `stall_reason` stays bit-exact between the two engines
     mi = jnp.asarray(max_iters, jnp.int32)
     mi_axis = 0 if mi.ndim == 1 else None
-    return jax.vmap(_finalize, in_axes=(0, 0, 0, mi_axis))(wls, s, iters, mi)
+    res = jax.vmap(_finalize, in_axes=(0, 0, 0, mi_axis))(wls, s, iters, mi)
+    # trips broadcasts to [S] so sharded runs report each lane against its
+    # own shard's loop (sum over lanes == lane-iterations allocated)
+    tel = BatchTelemetry(loop_trips=jnp.full((S,), trips, jnp.int32),
+                         active_trips=act)
+    return res, tel
 
 
 _simulate_batch = jax.jit(_simulate_batch_impl,
-                          static_argnums=(0, 6, 7, 8, 9))
+                          static_argnums=(0, 6, 7, 8, 9, 10, 11))
 
 
 def simulate_batch(mode: int, params: SimParams, wls: FlatWorkload,
                    tree: DTree, rate_threshold: jax.Array,
-                   plan=None, step_budget: int | None = None) -> SimResult:
+                   plan=None, step_budget: int | None = None,
+                   kernels: str | None = None,
+                   telemetry: list | None = None) -> SimResult:
     """`jax.vmap` of `simulate` over a leading scenario axis.
 
     `wls` is a stacked workload (`workloads.stack_workloads`): every field
@@ -1391,12 +1485,38 @@ def simulate_batch(mode: int, params: SimParams, wls: FlatWorkload,
     scenario per lane. Returns a `SimResult` whose every field has a
     leading `[S]` axis; scenario results are bit-identical to running
     `simulate` one scenario at a time on CPU — with or without faults.
+
+    `kernels` overrides the `REPRO_SIM_KERNELS` knob (resolved here, at
+    call time, so env flips dispatch correctly). When `telemetry` is a
+    list, a per-call occupancy record (lane-iterations allocated vs.
+    retired) is appended to it.
     """
     tree_axis = 0 if tree.feat.ndim == 2 else None
     thr_axis = 0 if getattr(rate_threshold, "ndim", 0) >= 1 else None
     plan_axis = 0 if plan is not None and plan.pe_fail_at.ndim == 2 else None
-    return _simulate_batch(mode, params, wls, tree, rate_threshold, plan,
-                           tree_axis, thr_axis, plan_axis, step_budget)
+    fcaps = flt.plan_capabilities(plan) if plan is not None else flt.NO_CAPS
+    res, tel = _simulate_batch(mode, params, wls, tree, rate_threshold,
+                               plan, tree_axis, thr_axis, plan_axis,
+                               step_budget, _kops.kernel_mode(kernels),
+                               fcaps)
+    if telemetry is not None:
+        telemetry.append(_telemetry_record(res, tel))
+    return res
+
+
+def _telemetry_record(res: SimResult, tel: BatchTelemetry) -> dict:
+    """Host-side occupancy record for one engine call (blocks on `tel`)."""
+    loop = np.asarray(jax.device_get(tel.loop_trips))
+    act = np.asarray(jax.device_get(tel.active_trips))
+    events = np.asarray(jax.device_get(res.n_iters))
+    allocated = int(loop.sum())
+    return {
+        "lanes": int(loop.shape[0]),
+        "lane_trips": allocated,            # sum over lanes of shard trips
+        "active_trips": int(act.sum()),     # trips with the lane still live
+        "events": int(events.sum()),        # retired simulator events
+        "occupancy": float(act.sum() / allocated) if allocated else 1.0,
+    }
 
 
 def to_device(wl: FlatWorkload) -> FlatWorkload:
@@ -1447,7 +1567,8 @@ def _resolve_devices(devices) -> tuple:
 @functools.lru_cache(maxsize=None)
 def _sharded_batch_fn(mode: int, tree_axis, thr_axis, plan_axis,
                       has_plan: bool, devices: tuple,
-                      step_budget: int | None = None):
+                      step_budget: int | None = None,
+                      kernels: str = "off", fcaps: tuple = flt.FULL_CAPS):
     """Compiled scenario-sharded batch engine over a fixed device tuple.
 
     Shards the leading scenario axis of every batched argument across
@@ -1463,7 +1584,7 @@ def _sharded_batch_fn(mode: int, tree_axis, thr_axis, plan_axis,
     def call(params, wls, tree, rate_threshold, plan):
         return _simulate_batch_impl(mode, params, wls, tree, rate_threshold,
                                     plan, tree_axis, thr_axis, plan_axis,
-                                    step_budget)
+                                    step_budget, kernels, fcaps)
 
     if _shard_map is not None:
         mesh = Mesh(np.array(devices), ("s",))
@@ -1511,16 +1632,20 @@ def _sharded_batch_fn(mode: int, tree_axis, thr_axis, plan_axis,
 def run(mode: int, wl: FlatWorkload, params: SimParams | None = None,
         tree: DTree | None = None,
         rate_threshold: float = 1e9,
-        plan=None, step_budget: int | None = None) -> SimResult:
+        plan=None, step_budget: int | None = None,
+        kernels: str | None = None) -> SimResult:
     """Convenience wrapper (host-side numpy workload ok). `plan` threads
     an optional `faults.FaultPlan` through the simulation; `step_budget`
     caps the event-loop iterations (stall diagnostics in
-    `SimResult.stall_reason`)."""
+    `SimResult.stall_reason`); `kernels` overrides `REPRO_SIM_KERNELS`
+    (decision-kernel dispatch, resolved at call time)."""
     params = params or make_params()
     tree = tree or always_fast_tree()
     plan = _prep_plan(plan, params, batched=False)
+    fcaps = flt.plan_capabilities(plan) if plan is not None else flt.NO_CAPS
     return simulate(mode, params, to_device(wl), tree,
-                    jnp.float32(rate_threshold), plan, step_budget)
+                    jnp.float32(rate_threshold), plan, step_budget,
+                    _kops.kernel_mode(kernels), fcaps)
 
 
 def run_batch(mode: int, wls, params: SimParams | None = None,
@@ -1529,7 +1654,9 @@ def run_batch(mode: int, wls, params: SimParams | None = None,
               batch_size: int | None = None,
               plan=None,
               devices=None,
-              step_budget: int | None = None) -> SimResult:
+              step_budget: int | None = None,
+              kernels: str | None = None,
+              telemetry: list | None = None) -> SimResult:
     """Sharded, streaming batched sweep over a scenario axis.
 
     `wls` is either a list of same-shape `FlatWorkload`s or an
@@ -1551,6 +1678,12 @@ def run_batch(mode: int, wls, params: SimParams | None = None,
     `batch_size` and any device count. Chunks are dispatched
     asynchronously and fetched once at the end, overlapping host-side tree
     slicing with device compute.
+
+    `kernels` overrides the `REPRO_SIM_KERNELS` decision-kernel knob
+    (resolved here at call time). When `telemetry` is a list, one
+    occupancy record per chunk (lane-iterations allocated vs. retired) is
+    appended to it — out-of-band so results stay bit-exact across chunk
+    compositions.
     """
     from repro.core.workloads import stack_workloads
 
@@ -1575,6 +1708,8 @@ def run_batch(mode: int, wls, params: SimParams | None = None,
 
     devs = _resolve_devices(devices)
     D = len(devs)
+    kern = _kops.kernel_mode(kernels)
+    fcaps = flt.plan_capabilities(plan) if plan is not None else flt.NO_CAPS
     # fixed chunk shape: user size clamped to n, rounded up to a device
     # multiple so every shard is equal-sized
     B = n if batch_size is None else min(batch_size, n)
@@ -1582,7 +1717,8 @@ def run_batch(mode: int, wls, params: SimParams | None = None,
     if D == 1 and B >= n:
         # single device, single chunk: the plain vmapped engine
         return simulate_batch(mode, params, stacked, tree, rate_threshold,
-                              plan, step_budget=step_budget)
+                              plan, step_budget=step_budget, kernels=kern,
+                              telemetry=telemetry)
 
     tree_b = tree.feat.ndim == 2
     thr_b = rate_threshold.ndim >= 1
@@ -1590,13 +1726,15 @@ def run_batch(mode: int, wls, params: SimParams | None = None,
         dispatch = _sharded_batch_fn(mode, 0 if tree_b else None,
                                      0 if thr_b else None,
                                      0 if plan_b else None,
-                                     plan is not None, devs, step_budget)
+                                     plan is not None, devs, step_budget,
+                                     kern, fcaps)
     else:
         def dispatch(p, w, t, rt, pl):
             return _simulate_batch(mode, p, w, t, rt, pl,
                                    0 if tree_b else None,
                                    0 if thr_b else None,
-                                   0 if plan_b else None, step_budget)
+                                   0 if plan_b else None, step_budget,
+                                   kern, fcaps)
 
     n_pad = -(-n // B) * B
     # pad lanes replay the last real scenario; their results are dropped
@@ -1617,5 +1755,9 @@ def run_batch(mode: int, wls, params: SimParams | None = None,
         chunks.append(dispatch(params, part, t, rt, pl))
     # one blocking fetch for the whole sweep (dispatches above are async)
     chunks = jax.device_get(chunks)
+    if telemetry is not None:
+        for res_c, tel_c in chunks:
+            telemetry.append(_telemetry_record(res_c, tel_c))
     return jax.tree_util.tree_map(
-        lambda *xs: np.concatenate(xs, axis=0)[:n], *chunks)
+        lambda *xs: np.concatenate(xs, axis=0)[:n],
+        *[res_c for res_c, _ in chunks])

@@ -1,4 +1,4 @@
-"""ETF finish-time search kernel (TPU Pallas) — the paper's own hot spot.
+"""ETF finish-time search kernels (TPU Pallas) — the paper's own hot spot.
 
 Algorithm 1's inner search computes FT[r, p] = max(avail[r, p], free[p],
 now) + exec[r, p] over (ready tasks x PEs) and takes the argmin. On the
@@ -15,6 +15,20 @@ dense masked min-reduction:
     decisions).
 
 inf entries (PE cannot run the task type / empty ready slots) never win.
+
+Two kernels serve the simulator's decision hot path (dispatched by
+`ops.py`, knob `REPRO_SIM_KERNELS`):
+
+  * `etf_ft_search_masked` — the scenario-batched decision search with
+    per-lane `slot_ok` / `pe_alive` masks and a degraded-mode feasibility
+    flag. The tie-break contract is the simulator's: the FIRST global
+    minimum of the flattened [R, P] finish-time matrix wins, exactly as
+    `jnp.argmin` over the inf-masked matrix does, so the kernel-backed
+    decision path is bit-exact against the inline jnp path.
+  * `push_rows` — the push-time availability rows: for each newly-ready
+    task the max over its predecessors of (pred finish + NoC transfer
+    when the predecessor ran on a different cluster), fused over the
+    [K, MP, P] contribution tensor in one pass.
 """
 from __future__ import annotations
 
@@ -25,6 +39,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 BIG = 3.4e38
+LANES = 128         # VPU lane width: the PE axis pads up to this
+SUBLANES = 8        # f32 sublane tile height (ready axis alignment)
+
+# One grid step of the search kernel owns a [R, Pp] block. Interpret mode
+# evaluates the grid with a Python interpreter, so its cost scales with
+# the total number of block cells, not the batch count — the budget below
+# is 64 grid steps of the default [64, 128] block, which reproduces the
+# old `B > 64` bailout at that geometry instead of hard-coding a batch
+# count that silently lies for other block shapes.
+MAX_INTERPRET_CELLS = 64 * 64 * LANES
+
+
+def _pad_lanes(p: int) -> int:
+    return max(LANES, -(-p // LANES) * LANES)
 
 
 def _etf_kernel(avail_ref, free_ref, exec_ref, now_ref, out_ref):
@@ -45,7 +73,7 @@ def etf_ft_search(avail, free, exec_t, now, *, interpret=False):
     """avail [B, R, P], free [B, P], exec_t [B, R, P], now [B].
     Returns (ft_min [B], slot [B], pe [B]). Lanes padded to 128."""
     B, R, P = avail.shape
-    Pp = max(128, -(-P // 128) * 128)
+    Pp = _pad_lanes(P)
     pad = ((0, 0), (0, 0), (0, Pp - P))
     avail_p = jnp.pad(avail, pad, constant_values=jnp.inf)
     exec_p = jnp.pad(exec_t, pad, constant_values=jnp.inf)
@@ -68,3 +96,118 @@ def etf_ft_search(avail, free, exec_t, now, *, interpret=False):
     ft_min = out[:, 0]
     flat_idx = out[:, 1].astype(jnp.int32)
     return ft_min, flat_idx // Pp, flat_idx % Pp
+
+
+# ---------------------------------------------------------------------------
+# scenario-batched masked decision search
+# ---------------------------------------------------------------------------
+def _etf_masked_kernel(avail_ref, free_ref, exec_ref, now_ref, sok_ref,
+                       alive_ref, out_ref):
+    avail = avail_ref[0]                       # [R, Pp]
+    free = free_ref[0]                         # [1, Pp]
+    exec_t = exec_ref[0]                       # [R, Pp]
+    now = now_ref[0, 0]
+    sok = sok_ref[0]                           # [R] f32 0/1
+    alive = alive_ref[0]                       # [1, Pp] f32 0/1
+    ft = jnp.maximum(jnp.maximum(avail, free), now) + exec_t
+    ok = (sok[:, None] > 0) & (alive > 0) & jnp.isfinite(ft)
+    ft = jnp.where(ok, ft, BIG)
+    flat = ft.reshape(-1)
+    idx = jnp.argmin(flat)
+    out_ref[0, 0] = flat[idx]
+    out_ref[0, 1] = idx.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def etf_ft_search_masked(avail, free, exec_t, now, slot_ok, pe_alive, *,
+                         interpret=False):
+    """Scenario-batched masked search: avail/exec_t [S, R, P], free [S, P],
+    now [S], slot_ok [S, R] bool, pe_alive [S, P] bool.
+
+    Returns (ft_min [S], slot [S], pe [S], feasible [S]): the first global
+    minimum of the masked finish-time matrix per scenario (identical index
+    to `jnp.argmin` over the inf-masked matrix — slot 0 / pe 0 when every
+    candidate is masked, in which case `feasible` is False).
+    """
+    S, R, P = avail.shape
+    Pp = _pad_lanes(P)
+    pad = ((0, 0), (0, 0), (0, Pp - P))
+    avail_p = jnp.pad(avail, pad, constant_values=jnp.inf)
+    exec_p = jnp.pad(exec_t, pad, constant_values=jnp.inf)
+    free_p = jnp.pad(free[:, None, :], pad, constant_values=jnp.inf)
+    alive_p = jnp.pad(pe_alive.astype(jnp.float32)[:, None, :], pad)
+    sok = slot_ok.astype(jnp.float32)
+
+    out = pl.pallas_call(
+        _etf_masked_kernel,
+        grid=(S,),
+        in_specs=[
+            pl.BlockSpec((1, R, Pp), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, 1, Pp), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, R, Pp), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+            pl.BlockSpec((1, R), lambda b: (b, 0)),
+            pl.BlockSpec((1, 1, Pp), lambda b: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 2), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, 2), jnp.float32),
+        interpret=interpret,
+    )(avail_p, free_p, exec_p, now[:, None], sok, alive_p)
+
+    ft_min = out[:, 0]
+    flat_idx = out[:, 1].astype(jnp.int32)
+    return ft_min, flat_idx // Pp, flat_idx % Pp, ft_min < BIG
+
+
+# ---------------------------------------------------------------------------
+# push-time availability rows (the [K, MP, P] NoC-contribution max)
+# ---------------------------------------------------------------------------
+def _push_kernel(pfin_ref, cost_ref, pcl_ref, pv_ref, pecl_ref, base_ref,
+                 out_ref):
+    pfin = pfin_ref[0]                         # [K, MP]
+    cost = cost_ref[0]                         # [K, MP]
+    pcl = pcl_ref[0]                           # [K, MP] f32 cluster ids
+    pv = pv_ref[0]                             # [K, MP] f32 0/1
+    pecl = pecl_ref[0]                         # [Pp] f32 cluster ids
+    base = base_ref[0]                         # [K]
+    cross = (pcl[:, :, None] != pecl[None, None, :]).astype(jnp.float32)
+    contrib = jnp.where(pv[:, :, None] > 0,
+                        pfin[:, :, None] + cost[:, :, None] * cross,
+                        -BIG)                  # [K, MP, Pp]
+    out_ref[0] = jnp.maximum(contrib.max(axis=1), base[:, None])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def push_rows(pfin, cost, pcl, pv, pe_cluster, bases, *, interpret=False):
+    """Scenario-batched push-time rows: pfin/cost/pcl/pv [S, K, MP]
+    (pred finish, NoC transfer cost, pred cluster, validity), pe_cluster
+    [P], bases [S, K]. Returns rows [S, K, P]:
+
+      rows[s, k, p] = max(max_m over valid preds of
+                          (pfin + cost * (pcl != cluster(p)))), bases[s, k])
+
+    exactly the simulator's `_avail_rows` contribution max.
+    """
+    S, K, MP = pfin.shape
+    P = pe_cluster.shape[0]
+    Pp = _pad_lanes(P)
+    pecl = jnp.pad(pe_cluster.astype(jnp.float32), (0, Pp - P),
+                   constant_values=-1.0)[None, :]
+
+    out = pl.pallas_call(
+        _push_kernel,
+        grid=(S,),
+        in_specs=[
+            pl.BlockSpec((1, K, MP), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, K, MP), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, K, MP), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, K, MP), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, Pp), lambda b: (0, 0)),
+            pl.BlockSpec((1, K), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, K, Pp), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, K, Pp), jnp.float32),
+        interpret=interpret,
+    )(pfin, cost, pcl.astype(jnp.float32), pv.astype(jnp.float32), pecl,
+      bases)
+    return out[:, :, :P]

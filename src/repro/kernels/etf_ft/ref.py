@@ -1,7 +1,19 @@
-"""Pure-jnp oracle for the ETF finish-time search."""
+"""Pure-jnp oracles / fused XLA formulations for the decision kernels.
+
+`etf_ft_reference` is the original unbatched-shape oracle the property
+tests compare the Pallas kernel against. The two `*_masked` / `push_*`
+functions below are the single fused, jit-friendly XLA formulations the
+dispatch layer (`ops.py`) uses on non-TPU backends: rank-polymorphic over
+leading batch axes so they trace identically inside `vmap`'d simulator
+steps, and bit-exact against the simulator's inline jnp path (same
+first-global-minimum argmin tie-break, same floating-point ops in the
+same order).
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
+
+BIG = 3.4e38
 
 
 def etf_ft_reference(avail, free, exec_t, now):
@@ -9,9 +21,58 @@ def etf_ft_reference(avail, free, exec_t, now):
     (ft_min [B], slot [B], pe [B])."""
     ft = jnp.maximum(jnp.maximum(avail, free[:, None, :]),
                      now[:, None, None]) + exec_t
-    ft = jnp.where(jnp.isfinite(ft), ft, 3.4e38)
+    ft = jnp.where(jnp.isfinite(ft), ft, BIG)
     B, R, P = ft.shape
     flat = ft.reshape(B, -1)
     idx = jnp.argmin(flat, axis=1)
     return (jnp.take_along_axis(flat, idx[:, None], 1)[:, 0],
             idx // P, idx % P)
+
+
+def etf_ft_masked_reference(avail, free, exec_t, now, slot_ok,
+                            pe_alive=None):
+    """Masked decision search, rank-polymorphic over leading batch axes.
+
+    avail/exec_t [..., R, P], free [..., P], now [...] scalar per batch
+    element, slot_ok [..., R] bool, pe_alive [..., P] bool or None (all
+    alive). Returns (ft_min, slot, pe, feasible) with the simulator's
+    tie-break: first global minimum of the flattened masked [R, P]
+    matrix; slot 0 / pe 0 (feasible=False) when everything is masked.
+    """
+    ft = jnp.maximum(jnp.maximum(avail, free[..., None, :]),
+                     now[..., None, None]) + exec_t
+    mask = slot_ok[..., :, None]
+    if pe_alive is not None:
+        mask = mask & pe_alive[..., None, :]
+    ft = jnp.where(mask & jnp.isfinite(ft), ft, BIG)
+    R, P = ft.shape[-2], ft.shape[-1]
+    flat = ft.reshape(ft.shape[:-2] + (R * P,))
+    idx = jnp.argmin(flat, axis=-1)
+    ft_min = jnp.take_along_axis(flat, idx[..., None], -1)[..., 0]
+    return ft_min, idx // P, idx % P, ft_min < BIG
+
+
+def push_rows_reference(pfin, cost, pcl, pv, pe_cluster, bases,
+                        n_clusters):
+    """Fused push-time availability rows, rank-polymorphic over leading
+    batch axes.
+
+    pfin/cost/pcl/pv [..., K, MP] (pred finish, NoC transfer cost, pred
+    cluster id, validity), pe_cluster [P], bases [..., K], n_clusters
+    static (unused — kept so the dispatch signature matches the Pallas
+    kernel's geometry needs). Returns rows [..., K, P] ==
+    max(max over valid preds of (pfin + cost * (pcl != cluster(p))),
+        bases).
+
+    Deliberately the same broadcast-max the simulator inlines (a
+    per-source-cluster [.., K, C] decomposition benchmarked ~20% slower
+    on CPU: the intermediates cost more than the [K, MP, P] tensor at
+    these sizes) — identical op order keeps it bitwise equal to the
+    inline path, and XLA fuses the whole thing into one reduction.
+    """
+    del n_clusters
+    cross = pcl[..., :, :, None] != pe_cluster      # [..., K, MP, P]
+    contrib = jnp.where(pv[..., None],
+                        pfin[..., None] + cost[..., None] * cross,
+                        jnp.float32(-jnp.inf))
+    return jnp.maximum(contrib.max(axis=-2), bases[..., None])

@@ -137,6 +137,75 @@ def test_run_batch_per_scenario_trees():
 
 
 # ---------------------------------------------------------------------------
+# kernel-backed decision path (PR-10): REPRO_SIM_KERNELS on, bit-exact
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", ALL_MODES)
+def test_run_batch_kernels_xla_matches_sequential(mode):
+    """The fused-XLA decision path (`kernels="xla"`) must be bit-exact vs
+    the inline-jnp sequential path for every mode — same first-global-min
+    argmin tie-break, same push-time contribution max."""
+    tree = _mixed_tree() if mode == sim.MODE_DAS else None
+    rb = sim.run_batch(mode, WLS, PARAMS, tree=tree, rate_threshold=500.0,
+                       kernels="xla")
+    for k, wl in enumerate(WLS):
+        rs = sim.run(mode, wl, PARAMS, tree=tree, rate_threshold=500.0,
+                     kernels="off")
+        rk = sim.result_at(rb, k)
+        for name in SCALARS:
+            assert np.array_equal(np.asarray(getattr(rs, name)),
+                                  np.asarray(getattr(rk, name))), \
+                (mode, k, name)
+        np.testing.assert_array_equal(np.asarray(rs.finish),
+                                      np.asarray(rk.finish))
+        np.testing.assert_array_equal(np.asarray(rs.pe_of),
+                                      np.asarray(rk.pe_of))
+
+
+@pytest.mark.parametrize("mode", [sim.MODE_ETF, sim.MODE_DAS])
+def test_run_kernels_pallas_interpret_matches(mode):
+    """The Pallas kernels (interpret mode off-TPU — the TPU kernel's
+    semantics) agree bit-exactly with the inline path. Sequential runs
+    only: interpret mode pays a Python visit per grid step."""
+    tree = _mixed_tree() if mode == sim.MODE_DAS else None
+    wl = WLS[1]
+    r0 = sim.run(mode, wl, PARAMS, tree=tree, rate_threshold=500.0,
+                 kernels="off")
+    rp = sim.run(mode, wl, PARAMS, tree=tree, rate_threshold=500.0,
+                 kernels="pallas")  # off-TPU -> pallas-interpret
+    for name in sim.SimResult._fields:
+        a, b = np.asarray(getattr(r0, name)), np.asarray(getattr(rp, name))
+        assert a.tobytes() == b.tobytes(), (mode, name, a, b)
+
+
+def test_run_batch_kernels_telemetry():
+    """`telemetry=[]` collects one record per dispatch: allocated vs
+    active lane-trips, retired events, and an occupancy in (0, 1]."""
+    tel = []
+    r = sim.run_batch(sim.MODE_ETF, WLS, PARAMS, batch_size=2, devices=1,
+                      kernels="xla", telemetry=tel)
+    assert len(tel) == 2  # ceil(4/2) chunks
+    assert sum(t["events"] for t in tel) == int(np.asarray(r.n_iters).sum())
+    for t in tel:
+        assert t["lanes"] == 2
+        assert 0 < t["active_trips"] <= t["lane_trips"]
+        assert 0 < t["occupancy"] <= 1.0
+
+
+def test_kernels_no_retrace_across_two_sweeps():
+    """With kernels on, a second same-shape sweep must add ZERO retraces
+    — the dispatch mode is a static jit arg, so flipping nothing reuses
+    the warm executable."""
+    cells_b = [(1, 1), (2, 3), (3, 5), (4, 7)]
+    wls_b = [SUITE.build(mi, ri) for mi, ri in cells_b]
+    sim.run_batch(sim.MODE_ETF, WLS, PARAMS, batch_size=2, devices=1,
+                  kernels="xla")  # warm
+    before = dict(sim.TRACE_COUNT)
+    sim.run_batch(sim.MODE_ETF, wls_b, PARAMS, batch_size=2, devices=1,
+                  kernels="xla")
+    assert sim.TRACE_COUNT == before, (before, sim.TRACE_COUNT)
+
+
+# ---------------------------------------------------------------------------
 # oracle: batched == sequential, bit for bit
 # ---------------------------------------------------------------------------
 def test_oracle_generate_batched_equals_sequential():

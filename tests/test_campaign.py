@@ -129,6 +129,87 @@ def test_kill_resume_bit_exact_stacked_fault_plans(tmp_path, monkeypatch):
     _assert_bit_exact(ref, out.result, ctx="stacked plans")
 
 
+def test_packed_kill_resume_bit_exact(tmp_path, monkeypatch):
+    """Length-aware packing (PR-10): chunks hold scenarios in predicted-
+    length order, the permutation rides the manifest, and a killed packed
+    campaign resumes to the same unscattered grid-order result."""
+    ref = sim.run_batch(sim.MODE_ETF, WLS, PARAMS, batch_size=B)
+
+    unkill = _kill_after(monkeypatch, 2)
+    with pytest.raises(_Killed):
+        camp.run_campaign(sim.MODE_ETF, WLS, PARAMS, batch_size=B,
+                          checkpoint_dir=str(tmp_path), retry=FAST,
+                          pack=True)
+    unkill()
+
+    out = camp.run_campaign(sim.MODE_ETF, WLS, PARAMS, batch_size=B,
+                            checkpoint_dir=str(tmp_path), retry=FAST,
+                            pack=True)
+    assert out.stats["packed"] is True
+    assert out.stats["chunks_reused"] == 2, out.stats
+    assert out.stats["chunks_computed"] == N_CHUNKS - 2, out.stats
+    _assert_bit_exact(ref, out.result, ctx="packed kill-resume")
+    # the manifest records the (descending predicted-length) permutation
+    [cdir] = [d for d in tmp_path.iterdir() if d.is_dir()]
+    man = json.loads((cdir / camp.MANIFEST_NAME).read_text())
+    pred = camp.predicted_events(
+        workloads.stack_workloads(WLS))
+    assert sorted(man["perm"]) == list(range(len(WLS)))
+    assert list(np.asarray(pred)[man["perm"]]) == \
+        sorted(pred, reverse=True)
+    # occupancy telemetry covers the computed chunk(s)
+    assert out.stats["lane_trips"] > 0
+    assert 0 < out.stats["occupancy"] <= 1.0
+
+
+def test_pack_knob_and_env_opt_out(monkeypatch):
+    """pack=False / REPRO_BENCH_PACK=0 keep grid order; either way the
+    unscattered result is bit-exact vs run_batch."""
+    ref = sim.run_batch(sim.MODE_LUT, WLS, PARAMS, batch_size=B)
+    packed = camp.run_campaign(sim.MODE_LUT, WLS, PARAMS, batch_size=B,
+                               retry=FAST, pack=True)
+    plain = camp.run_campaign(sim.MODE_LUT, WLS, PARAMS, batch_size=B,
+                              retry=FAST, pack=False)
+    assert packed.stats["packed"] is True
+    assert plain.stats["packed"] is False
+    _assert_bit_exact(ref, packed.result, ctx="packed")
+    _assert_bit_exact(ref, plain.result, ctx="unpacked")
+    # packing may only help: never more allocated lane-iterations
+    assert packed.stats["lane_trips"] <= plain.stats["lane_trips"]
+    monkeypatch.setenv("REPRO_BENCH_PACK", "0")
+    env_off = camp.run_campaign(sim.MODE_LUT, WLS, PARAMS, batch_size=B,
+                                retry=FAST)
+    assert env_off.stats["packed"] is False
+    _assert_bit_exact(ref, env_off.result, ctx="env opt-out")
+
+
+def test_pack_mismatch_resume_recomputes(tmp_path):
+    """Chunks checkpointed under one packing order must not be reused by
+    a campaign scheduling a different order (the manifest's perm
+    mismatches, so the old chunks are dropped)."""
+    camp.run_campaign(sim.MODE_LUT, WLS, PARAMS, batch_size=B,
+                      checkpoint_dir=str(tmp_path), retry=FAST, pack=True)
+    ref = sim.run_batch(sim.MODE_LUT, WLS, PARAMS, batch_size=B)
+    out = camp.run_campaign(sim.MODE_LUT, WLS, PARAMS, batch_size=B,
+                            checkpoint_dir=str(tmp_path), retry=FAST,
+                            pack=False)
+    assert out.stats["chunks_reused"] == 0, out.stats
+    assert out.stats["chunks_computed"] == N_CHUNKS, out.stats
+    _assert_bit_exact(ref, out.result, ctx="pack-mismatch resume")
+
+
+def test_predicted_events_shape_and_monotonicity():
+    """The predictor is `3 * n_tasks + n_insts` (the engine's own
+    max_iters shape): more tasks at the same instance count must never
+    predict shorter."""
+    stacked = workloads.stack_workloads(WLS)
+    pred = camp.predicted_events(stacked)
+    assert pred.shape == (len(WLS),)
+    expect = 3 * np.asarray(stacked.n_tasks, np.int64) \
+        + np.asarray(stacked.n_insts, np.int64)
+    np.testing.assert_array_equal(pred, expect)
+
+
 def test_uncheckpointed_campaign_matches_run_batch():
     """Without a checkpoint dir the campaign is run_batch + stats."""
     ref = sim.run_batch(sim.MODE_ETF, WLS, PARAMS, batch_size=B)
@@ -204,12 +285,13 @@ def test_forced_oom_shrinks_and_completes(monkeypatch):
     ref = sim.run_batch(sim.MODE_LUT, WLS, PARAMS, batch_size=B)
     real = camp._compute_chunk
 
-    def oomy(mode, part, params, tree, rt, plan, batch, devices, budget):
+    def oomy(mode, part, params, tree, rt, plan, batch, devices, budget,
+             **kw):
         if batch > 1:
             raise RuntimeError("RESOURCE_EXHAUSTED: out of memory "
                                "allocating 1.21GB")
         return real(mode, part, params, tree, rt, plan, batch, devices,
-                    budget)
+                    budget, **kw)
 
     monkeypatch.setattr(camp, "_compute_chunk", oomy)
     out = camp.run_campaign(sim.MODE_LUT, WLS, PARAMS, batch_size=B,

@@ -352,3 +352,60 @@ def test_retry_budget_zero_never_retries(seed):
     assert not bool(r.stalled)
     assert int(r.n_retries) == 0
     assert int(r.n_dropped_jobs) <= int(r.n_faults)
+
+
+# ---------------------------------------------------------------------------
+# static capability gating: plans that can never kill / drop skip those
+# phases at trace time, bit-exactly
+# ---------------------------------------------------------------------------
+def test_plan_capabilities_flags():
+    hp = faults.healthy_plan()
+    assert faults.plan_capabilities(hp) == (False, False, False)
+    p0 = faults.fail_pes(hp, [0, 1], at=0.0)
+    # fail at t=0 can kill nothing (assignments need assign_t < tau)
+    assert faults.plan_capabilities(p0) == (True, False, False)
+    pt = faults.fail_pes(hp, [0], at=25.0)
+    assert faults.plan_capabilities(pt) == (True, True, False)
+    pd = faults.with_deadline(hp, 1e4)
+    assert faults.plan_capabilities(pd) == (False, False, True)
+    tr = faults.add_transient(hp, 3, at=40.0)
+    assert faults.plan_capabilities(tr) == (False, True, False)
+
+
+@pytest.mark.parametrize("mode", [sim.MODE_LUT, sim.MODE_ETF, sim.MODE_DAS])
+def test_gated_kill_phase_bit_exact_vs_full_machinery(mode):
+    """A fail-at-t=0 plan traces without the kill/drop machinery
+    (`can_kill=False`). Adding one finite transient far past the makespan
+    forces the FULL machinery back in while firing nothing — both
+    specializations must agree bit-for-bit, sequential and batched."""
+    kw = {"tree": _tree()} if mode == sim.MODE_DAS else {}
+    base = faults.fail_cluster(faults.healthy_plan(), soc.FFT_ACC, at=0.0)
+    armed = faults.add_transient(base, 0, at=1e30)   # finite, never fires
+    assert faults.plan_capabilities(base) == (True, False, False)
+    assert faults.plan_capabilities(armed) == (True, True, False)
+    r_gated = sim.run(mode, WL, PARAMS, plan=base, **kw)
+    r_full = sim.run(mode, WL, PARAMS, plan=armed, **kw)
+    _assert_results_equal(r_gated, r_full)
+
+    wl_b = workloads.stack_workloads([WL] * 3)
+    rb_g = sim.run_batch(mode, wl_b, PARAMS,
+                         plan=faults.stack_plans([base] * 3),
+                         batch_size=2, **kw)
+    rb_f = sim.run_batch(mode, wl_b, PARAMS,
+                         plan=faults.stack_plans([armed] * 3),
+                         batch_size=2, **kw)
+    _assert_results_equal(rb_g, rb_f)
+    _assert_results_equal(r_gated, sim.result_at(rb_g, 1))
+
+
+def test_gated_deadline_phase_bit_exact_when_slack():
+    """A deadline far beyond the makespan (finite -> full machinery) vs no
+    deadline (gated) on an otherwise identical degraded plan: nothing
+    drops, results identical."""
+    base = faults.fail_cluster(faults.healthy_plan(), soc.FFT_ACC, at=0.0)
+    slack = faults.with_deadline(base, 1e30)
+    assert faults.plan_capabilities(slack)[2]
+    r_gated = sim.run(sim.MODE_ETF, WL, PARAMS, plan=base)
+    r_full = sim.run(sim.MODE_ETF, WL, PARAMS, plan=slack)
+    assert int(r_full.n_dropped_jobs) == 0
+    _assert_results_equal(r_gated, r_full)

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from hyp_compat import hypothesis, st
-from repro.kernels.etf_ft import kernel as etfk, ref as etfr
+from repro.kernels.etf_ft import kernel as etfk, ops as etfo, ref as etfr
 from repro.kernels.flash_attention import kernel as fak, ref as far
 from repro.kernels.rg_lru import kernel as rgk, ref as rgr
 from repro.kernels.ssd_scan import kernel as ssdk, ref as ssdr
@@ -141,3 +141,173 @@ def test_etf_kernel_min_is_achievable():
         direct = max(float(avail[i, si, pi]), float(free[i, pi]), 0.0) \
             + float(ex[i, si, pi])
         assert abs(direct - float(ft[i])) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# masked decision search + push rows (PR-10, the simulator hot path)
+# ---------------------------------------------------------------------------
+def _masked_case(seed, s, r, tie_frac=0.0):
+    P = 19
+    ks = jax.random.split(jax.random.PRNGKey(seed), 7)
+    avail = jax.random.uniform(ks[0], (s, r, P)) * 10
+    free = jax.random.uniform(ks[1], (s, P)) * 10
+    ex = jnp.where(jax.random.uniform(ks[2], (s, r, P)) < 0.3, jnp.inf,
+                   jax.random.uniform(ks[3], (s, r, P)) * 5)
+    if tie_frac:
+        # quantize hard so many (slot, pe) pairs tie for the minimum —
+        # the tie-break (first flat index) is the contract under test
+        avail = jnp.round(avail / 5) * 5
+        free = jnp.round(free / 5) * 5
+        ex = jnp.round(ex)
+    now = jax.random.uniform(ks[4], (s,)) * 3
+    slot_ok = jax.random.uniform(ks[5], (s, r)) < 0.7
+    alive = jax.random.uniform(ks[6], (s, P)) < 0.8
+    return avail, free, ex, now, slot_ok, alive
+
+
+def _masked_oracle(avail, free, ex, now, slot_ok, alive):
+    """Inline numpy restatement of the simulator's masked argmin."""
+    a, f, e = np.asarray(avail), np.asarray(free), np.asarray(ex)
+    ft = np.maximum(np.maximum(a, f[:, None, :]),
+                    np.asarray(now)[:, None, None]) + e
+    ok = (np.asarray(slot_ok)[:, :, None] & np.asarray(alive)[:, None, :]
+          & np.isfinite(ft))
+    ft = np.where(ok, ft, etfk.BIG).astype(np.float32)
+    S, R, P = ft.shape
+    flat = ft.reshape(S, -1)
+    idx = flat.argmin(1)
+    mn = flat[np.arange(S), idx]
+    return mn, idx // P, idx % P, mn < etfk.BIG
+
+
+@hypothesis.settings(max_examples=10, deadline=None)
+@hypothesis.given(seed=st.integers(0, 1000), s=st.integers(1, 6),
+                  r=st.integers(2, 24), ties=st.booleans())
+def test_etf_masked_kernel_property(seed, s, r, ties):
+    case = _masked_case(seed, s, r, tie_frac=1.0 if ties else 0.0)
+    ft1, s1, p1, ok1 = etfk.etf_ft_search_masked(*case, interpret=True)
+    ft2, s2, p2, ok2 = etfr.etf_ft_masked_reference(*case)
+    ft3, s3, p3, ok3 = _masked_oracle(*case)
+    for tag, (ft, sl, pe, ok) in (("kernel", (ft1, s1, p1, ok1)),
+                                  ("xla", (ft2, s2, p2, ok2))):
+        assert np.asarray(ft).tobytes() == ft3.tobytes(), tag
+        assert (np.asarray(sl) == s3).all(), tag
+        assert (np.asarray(pe) == p3).all(), tag
+        assert (np.asarray(ok) == ok3).all(), tag
+
+
+def test_etf_masked_all_masked_lane():
+    """Everything masked -> slot 0 / pe 0, feasible False on both paths
+    (the simulator relies on this to fall back to its own no-op)."""
+    s, r, P = 2, 4, 19
+    avail = jnp.ones((s, r, P))
+    free = jnp.zeros((s, P))
+    ex = jnp.ones((s, r, P))
+    now = jnp.zeros((s,))
+    slot_ok = jnp.zeros((s, r), bool)
+    alive = jnp.ones((s, P), bool)
+    for fn in (lambda: etfk.etf_ft_search_masked(
+                   avail, free, ex, now, slot_ok, alive, interpret=True),
+               lambda: etfr.etf_ft_masked_reference(
+                   avail, free, ex, now, slot_ok, alive)):
+        _, sl, pe, ok = fn()
+        assert (np.asarray(sl) == 0).all() and (np.asarray(pe) == 0).all()
+        assert not np.asarray(ok).any()
+
+
+@hypothesis.settings(max_examples=10, deadline=None)
+@hypothesis.given(seed=st.integers(0, 1000), s=st.integers(1, 4),
+                  k=st.integers(1, 8), mp=st.integers(1, 6))
+def test_push_rows_kernel_vs_naive(seed, s, k, mp):
+    P, C = 19, 6
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    pfin = jax.random.uniform(ks[0], (s, k, mp)) * 100
+    cost = jax.random.uniform(ks[1], (s, k, mp)) * 10
+    pcl = jax.random.randint(ks[2], (s, k, mp), 0, C)
+    pv = jax.random.uniform(ks[3], (s, k, mp)) < 0.6
+    pecl = jnp.asarray(np.random.RandomState(seed).randint(0, C, P))
+    bases = jax.random.uniform(ks[4], (s, k)) * 50
+    # naive [S, K, MP, P] oracle — exactly the simulator's inline max
+    cross = (np.asarray(pcl)[..., None]
+             != np.asarray(pecl)[None, None, None, :])
+    contrib = np.where(np.asarray(pv)[..., None],
+                       np.asarray(pfin)[..., None]
+                       + np.asarray(cost)[..., None] * cross.astype(
+                           np.float32),
+                       -np.inf)
+    naive = np.maximum(contrib.max(axis=2),
+                       np.asarray(bases)[..., None]).astype(np.float32)
+    got_k = etfk.push_rows(pfin, cost, pcl, pv, pecl, bases,
+                           interpret=True)
+    got_r = etfr.push_rows_reference(pfin, cost, pcl, pv, pecl, bases, C)
+    np.testing.assert_array_equal(np.asarray(got_r), naive)
+    np.testing.assert_array_equal(np.asarray(got_k), naive)
+
+
+def test_etf_ops_dispatch_counts(monkeypatch):
+    """Each `ops` call tallies exactly one dispatch under its backend."""
+    case = _masked_case(0, 1, 4)
+    single = tuple(x[0] for x in case)
+    before = dict(etfo.DISPATCH_COUNT)
+    etfo.etf_decide(*single, mode="xla")
+    etfo.etf_decide(*single, mode="pallas-interpret")
+    assert etfo.DISPATCH_COUNT["etf_xla"] == before["etf_xla"] + 1
+    assert etfo.DISPATCH_COUNT["etf_pallas_interpret"] == \
+        before["etf_pallas_interpret"] + 1
+
+
+def test_kernel_mode_resolution(monkeypatch):
+    km = etfo.kernel_mode
+    assert km("off") == "off" and km("0") == "off"
+    assert km("xla") == "xla"
+    assert km("pallas-interpret") == "pallas-interpret"
+    on_tpu = jax.default_backend() == "tpu"
+    assert km("auto") == ("pallas" if on_tpu else "xla")
+    assert km("pallas") == ("pallas" if on_tpu else "pallas-interpret")
+    # idempotent on resolved modes
+    for m in ("off", "xla", "pallas", "pallas-interpret"):
+        assert km(km(m)) == km(m)
+    monkeypatch.setenv("REPRO_SIM_KERNELS", "off")
+    assert km() == "off"
+    with pytest.raises(ValueError, match="REPRO_SIM_KERNELS"):
+        km("bogus")
+
+
+def test_interpret_limit_derived_from_block_shape(monkeypatch):
+    """The interpret-mode bailout must come from the kernel's block
+    geometry (cells budget / per-step block), not a hard-coded batch:
+    at the default [64, 19->128] geometry it reproduces the old B > 64."""
+    assert etfo.interpret_batch_limit(64, 19) == 64
+    # half the rows -> twice the batch; wider PE pad -> proportionally less
+    assert etfo.interpret_batch_limit(32, 19) == 128
+    assert etfo.interpret_batch_limit(64, 129) == 32
+    monkeypatch.setenv("REPRO_ETF_FT_INTERPRET_CELLS", str(64 * 128 * 2))
+    assert etfo.interpret_batch_limit(64, 19) == 2
+
+
+def test_interpret_fallback_boundary_agrees(monkeypatch):
+    """`etf_ft` just below the limit (kernel) and just above (jnp ref
+    fallback) must agree — the silent-fallback bug was the two paths
+    drifting unnoticed."""
+    # shrink the budget so the boundary is tiny and cheap to straddle
+    monkeypatch.setenv("REPRO_ETF_FT_INTERPRET_CELLS", str(8 * 128 * 2))
+    r, P = 8, 19
+    limit = etfo.interpret_batch_limit(r, P)
+    assert limit == 2
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    B = limit + 1
+    avail = jax.random.uniform(ks[0], (B, r, P)) * 10
+    free = jax.random.uniform(ks[1], (B, P)) * 10
+    ex = jax.random.uniform(ks[2], (B, r, P)) * 5
+    now = jnp.zeros((B,))
+    before = etfo.DISPATCH_COUNT["etf_ft_ref_fallback"]
+    # B = limit: kernel path (no fallback tally)
+    out_k = etfo.etf_ft(avail[:limit], free[:limit], ex[:limit],
+                        now[:limit], interpret=True)
+    assert etfo.DISPATCH_COUNT["etf_ft_ref_fallback"] == before
+    # B = limit + 1: reference fallback (tallied)
+    out_r = etfo.etf_ft(avail, free, ex, now, interpret=True)
+    assert etfo.DISPATCH_COUNT["etf_ft_ref_fallback"] == before + 1
+    for a, b in zip(out_k, out_r):
+        np.testing.assert_array_equal(np.asarray(a),
+                                      np.asarray(b)[:limit])

@@ -110,6 +110,48 @@ def test_shared_plan_sharded():
                            SCALARS + FAULT_SCALARS, k)
 
 
+@pytest.mark.parametrize("mode", ALL_MODES)
+def test_stacked_fault_plans_kernels_on(mode):
+    """Stacked per-scenario FaultPlans through the kernel-backed decision
+    path (`kernels="xla"`), sharded + padded: bit-exact vs the inline
+    sequential path for every mode."""
+    tree = _mixed_tree() if mode == sim.MODE_DAS else None
+    plans = [flt.random_plan(s) for s in range(len(WLS))]
+    rb = sim.run_batch(mode, WLS, PARAMS, tree=tree, rate_threshold=500.0,
+                       plan=flt.stack_plans(plans), batch_size=2,
+                       devices=N_DEV, kernels="xla")
+    for k, (wl, pl) in enumerate(zip(WLS, plans)):
+        rs = sim.run(mode, wl, PARAMS, tree=tree, rate_threshold=500.0,
+                     plan=pl, kernels="off")
+        _assert_cell_equal(rs, sim.result_at(rb, k),
+                           SCALARS + FAULT_SCALARS, (mode, k))
+
+
+def test_dead_pe_degraded_etf_tie_breaks_kernels_on():
+    """Kill whole clusters at t=0 so the degraded ETF search runs against
+    a mostly-dead PE mask: the kernel path must pick the same first-
+    global-minimum (slot, pe) as the inline path — the tie-break case the
+    masked argmin is most likely to get wrong."""
+    plan = flt.fail_cluster(flt.healthy_plan(), 0, at=0.0)
+    plan = flt.fail_cluster(plan, 2, at=0.0)
+    plan = flt.fail_pes(plan, [9, 10, 11], at=50.0)
+    dead_from_t0 = np.where(np.asarray(plan.pe_fail_at) == 0.0)[0]
+    for wl in WLS[:3]:
+        r0 = sim.run(sim.MODE_ETF, wl, PARAMS, plan=plan, kernels="off")
+        rx = sim.run(sim.MODE_ETF, wl, PARAMS, plan=plan, kernels="xla")
+        rp = sim.run(sim.MODE_ETF, wl, PARAMS, plan=plan, kernels="pallas")
+        # the alive mask constrained choices: never-alive PEs never chosen
+        pe_of = np.asarray(r0.pe_of)
+        assert not np.isin(pe_of[pe_of >= 0], dead_from_t0).any()
+        assert int(r0.n_done) > 0
+        for name in sim.SimResult._fields:
+            a = np.asarray(getattr(r0, name))
+            assert a.tobytes() == np.asarray(getattr(rx, name)).tobytes(), \
+                ("xla", name)
+            assert a.tobytes() == np.asarray(getattr(rp, name)).tobytes(), \
+                ("pallas", name)
+
+
 def test_multi_device_mesh_really_shards():
     """Under XLA_FLAGS=--xla_force_host_platform_device_count=N this is
     the test that proves the multi-device path ran (the others pass on one
